@@ -1,0 +1,90 @@
+"""Shared benchmark setup: a small model trained on the arithmetic-JSON
+task (GSM8K analogue) + grammar-sampled LM data, cached under artifacts/.
+
+All benchmarks run the REAL pipeline end-to-end on CPU; absolute wall
+times are CPU times, so each table also reports the hardware-independent
+quantities (forward passes per token, mask microseconds per token,
+intervention and acceptance rates) that determine the paper's TPU/GPU
+speedups.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+ART = ROOT / "artifacts" / "bench"
+
+from repro.configs.base import ModelConfig           # noqa: E402
+from repro.core import grammars                      # noqa: E402
+from repro.core.sampling import GrammarSampler       # noqa: E402
+from repro.models import build_model                 # noqa: E402
+from repro.tokenizer import BPETokenizer, train_bpe  # noqa: E402
+from repro.training import checkpoint, optimizer as opt  # noqa: E402
+from repro.training.data import GrammarLMDataset, TaskDataset  # noqa: E402
+from repro.training.train_loop import make_train_step  # noqa: E402
+
+MODEL_CFG = dict(n_layers=2, d_model=128, n_heads=4, n_kv_heads=4, d_ff=256,
+                 dtype="float32", max_seq_len=1024)
+TRAIN_STEPS = 500
+SEQ_LEN = 192
+BATCH = 8
+
+
+def get_tokenizer() -> BPETokenizer:
+    ART.mkdir(parents=True, exist_ok=True)
+    path = ART / "tokenizer.json"
+    if path.exists():
+        return BPETokenizer.load(path)
+    corpus = b""
+    for name in ("json", "json_gsm8k", "c", "xml_schema"):
+        corpus += GrammarSampler(grammars.load(name), seed=13).corpus(250)
+        corpus += b"\n"
+    # plus task-formatted text so the tokenizer sees prompts
+    import random
+
+    from repro.training.data import few_shot_prefix
+    corpus += few_shot_prefix(random.Random(0), 60, easy=True).encode()
+    tok = train_bpe(corpus, vocab_size=600)
+    tok.save(path)
+    return tok
+
+
+def get_model_and_params(retrain: bool = False):
+    tok = get_tokenizer()
+    cfg = ModelConfig(arch_id="bench-2l", family="dense",
+                      vocab_size=tok.vocab_size, **MODEL_CFG)
+    model = build_model(cfg)
+    ck = ART / "model"
+    if (ck / "params.npz").exists() and not retrain:
+        params, _, _ = checkpoint.load(
+            ck, jax.eval_shape(model.init, jax.random.PRNGKey(0)))
+        params = jax.tree.map(jnp.asarray, params)
+        return model, params, tok
+    params = model.init(jax.random.PRNGKey(0))
+    step = make_train_step(model, opt.AdamWConfig(
+        lr=3e-3, schedule="wsd", warmup_steps=10, total_steps=TRAIN_STEPS))
+    state = opt.init_state(params)
+    task = TaskDataset(tok, seq_len=SEQ_LEN, few_shot=1, easy=True).batches(BATCH)
+    lm = GrammarLMDataset(tok, "json", seq_len=SEQ_LEN).batches(BATCH)
+    t0 = time.perf_counter()
+    for i in range(TRAIN_STEPS):
+        src = task if i % 3 else lm     # 2/3 task, 1/3 free-form JSON
+        batch = {k: jnp.asarray(v) for k, v in next(src).items()}
+        params, state, metrics = step(params, state, batch)
+        if i % 40 == 0:
+            print(f"  [bench-train] step {i} loss={float(metrics['loss']):.3f}"
+                  f" ({time.perf_counter()-t0:.0f}s)", file=sys.stderr)
+    checkpoint.save(ck, params, meta={"steps": TRAIN_STEPS})
+    return model, params, tok
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,36 @@
+"""§4.3 — offline precomputation cost per grammar (paper: 1-5 s, C ~20 s
+at |V|=32k; ours scales with the in-repo vocab)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, get_tokenizer
+from repro.core import grammars
+from repro.core.scanner import Scanner
+from repro.core.trees import TreeCache
+
+
+def run(verbose: bool = True):
+    tok = get_tokenizer()
+    out = {}
+    for name in ("json", "json_gsm8k", "json_conll", "xml_schema",
+                 "template_rpg", "c"):
+        g = grammars.load(name)
+        tc = TreeCache(Scanner(g), list(tok.vocab))
+        t0 = time.perf_counter()
+        stats = tc.precompute()
+        dt = time.perf_counter() - t0
+        sizes = sum(t.root.size() for t in tc.trees.values())
+        out[name] = {"seconds": dt, "positions": int(stats["positions"]),
+                     "total_tree_nodes": sizes}
+        if verbose:
+            print(f"  [precompute] {name:14s} {dt:6.2f}s "
+                  f"{int(stats['positions'])} positions, "
+                  f"{sizes} tree nodes", flush=True)
+        emit(f"precompute_{name}", 1e6 * dt,
+             f"positions={int(stats['positions'])};nodes={sizes}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

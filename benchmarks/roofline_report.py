@@ -1,0 +1,93 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the artifacts
+written by repro.launch.dryrun / calibrate / roofline.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report > /tmp/tables.md
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.configs import ALIASES  # noqa: E402
+from repro.configs.base import INPUT_SHAPES  # noqa: E402
+from repro.launch.roofline import SUGGESTIONS, load_dryrun, roofline  # noqa: E402
+
+ART = ROOT / "artifacts"
+
+
+def fmt_bytes(n):
+    if n is None:
+        return "-"
+    return f"{n/2**30:.2f}"
+
+
+def dryrun_table(mesh: str) -> str:
+    rows = [
+        "| arch | shape | compile s | arg GiB/dev | temp GiB/dev | "
+        "HLO GFLOP/dev* | collectives (count) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for arch in ALIASES:
+        for shape in INPUT_SHAPES:
+            rec = load_dryrun(arch, shape, mesh)
+            if rec is None:
+                rows.append(f"| {arch} | {shape} | MISSING | | | | |")
+                continue
+            if "skipped" in rec:
+                rows.append(f"| {arch} | {shape} | skip (long_500k "
+                            f"n/a: full attention) | | | | |")
+                continue
+            mem = rec.get("memory", {})
+            colls = rec.get("collectives", {})
+            cstr = ", ".join(f"{k}:{v['count']}" for k, v in colls.items()
+                             if v["count"])
+            rows.append(
+                f"| {arch} | {shape} | {rec['compile_s']:.1f} | "
+                f"{fmt_bytes(mem.get('argument_bytes'))} | "
+                f"{fmt_bytes(mem.get('temp_bytes'))} | "
+                f"{rec.get('cost', {}).get('flops_per_device', 0)/1e9:.1f} | "
+                f"{cstr} |")
+    return "\n".join(rows)
+
+
+def roofline_table(mesh: str = "16x16") -> str:
+    rows = [
+        "| arch | shape | compute ms | memory ms | collective ms | dominant "
+        "| useful/total FLOPs | what would move the dominant term |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    data = []
+    for arch in ALIASES:
+        for shape in INPUT_SHAPES:
+            rec = load_dryrun(arch, shape, mesh)
+            if rec is None or "skipped" in rec:
+                continue
+            coll = rec.get("collective_bytes_corrected")
+            r = roofline(arch, shape, mesh, rec, coll_bytes=coll)
+            data.append(r)
+    data.sort(key=lambda r: (r["arch"], r["shape"]))
+    for r in data:
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']*1e3:.2f} | "
+            f"{r['memory_s']*1e3:.2f} | {r['collective_s']*1e3:.2f} | "
+            f"{r['dominant'].replace('_s','')} | "
+            f"{r['useful_flops_ratio']:.2f} | "
+            f"{SUGGESTIONS[r['dominant']][:60]}... |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    print("## §Dry-run — 16x16 (single pod, 256 chips)\n")
+    print(dryrun_table("16x16"))
+    print("\n## §Dry-run — 2x16x16 (multi-pod, 512 chips)\n")
+    print(dryrun_table("pod2x16x16"))
+    print("\n## §Roofline — single pod\n")
+    print(roofline_table("16x16"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""Table 2, second dataset — CoNLL-2003 NER analogue under the App. D
+entity-JSON schema.  Same protocol as table2: unconstrained vs naive vs
+DOMINO vs online; scores are entity-set F1 + well-formedness + match rate.
+
+Needs its own trained model (NER data); cached at artifacts/bench/ner/.
+"""
+from __future__ import annotations
+
+import random
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import ART, MODEL_CFG, emit, get_tokenizer
+from repro.configs.base import ModelConfig
+from repro.core import grammars
+from repro.models import build_model
+from repro.serving import EngineConfig, ServingEngine
+from repro.training import checkpoint, optimizer as opt
+from repro.training.data import (NERDataset, evaluate_entities,
+                                 make_ner_example, ner_few_shot)
+from repro.training.train_loop import make_train_step
+
+N_PROBLEMS = 20
+MAX_TOKENS = 72
+STEPS = 350
+
+
+def get_ner_model():
+    tok = get_tokenizer()
+    cfg = ModelConfig(arch_id="bench-ner", family="dense",
+                      vocab_size=tok.vocab_size, **MODEL_CFG)
+    model = build_model(cfg)
+    ck = ART / "ner"
+    if (ck / "params.npz").exists():
+        params, _, _ = checkpoint.load(
+            ck, jax.eval_shape(model.init, jax.random.PRNGKey(0)))
+        return model, jax.tree.map(jnp.asarray, params), tok
+    params = model.init(jax.random.PRNGKey(1))
+    step = make_train_step(model, opt.AdamWConfig(
+        lr=3e-3, schedule="wsd", warmup_steps=10, total_steps=STEPS))
+    state = opt.init_state(params)
+    data = NERDataset(tok, seq_len=160, few_shot=1).batches(8)
+    for i in range(STEPS):
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        params, state, m = step(params, state, batch)
+        if i % 50 == 0:
+            print(f"  [ner-train] step {i} loss={float(m['loss']):.3f}",
+                  flush=True)
+    checkpoint.save(ck, params, meta={"steps": STEPS})
+    return model, params, tok
+
+
+MODES = [
+    ("unconstrained", EngineConfig(mode="unconstrained",
+                                   max_tokens=MAX_TOKENS)),
+    ("naive_k0", EngineConfig(mode="naive", max_tokens=MAX_TOKENS)),
+    ("domino_kinf", EngineConfig(mode="domino", max_tokens=MAX_TOKENS)),
+    ("domino_kinf_spec", EngineConfig(mode="domino", speculative=True,
+                                      spec_s=8, spec_threshold=0.4,
+                                      max_tokens=MAX_TOKENS)),
+]
+
+
+def run(verbose: bool = True):
+    model, params, tok = get_ner_model()
+    g = grammars.load("json_conll")
+    rng = random.Random(31)
+    problems = [make_ner_example(rng) for _ in range(N_PROBLEMS)]
+    shots = ner_few_shot(random.Random(7), 2)
+    out = {}
+    base_tokens = {}
+    for name, ecfg in MODES:
+        eng = ServingEngine(model, params, tok,
+                            None if name == "unconstrained" else g,
+                            ecfg, max_len=1024)
+        f1 = wf = 0.0
+        match = total = 0
+        toks = fwd = 0
+        for i, ex in enumerate(problems):
+            r = eng.generate(shots + ex.prompt)
+            toks += max(1, r.n_tokens)
+            fwd += r.n_forward_passes
+            score = evaluate_entities(r.text, ex.answer_json)
+            if score is not None:
+                wf += 1
+                f1 += score
+            if name == "unconstrained":
+                base_tokens[i] = r.token_ids
+            else:
+                b = base_tokens.get(i, [])
+                n = min(len(b), len(r.token_ids))
+                match += sum(1 for a, c in zip(b[:n], r.token_ids[:n])
+                             if a == c)
+                total += max(len(b), len(r.token_ids), 1)
+        row = {"f1": f1 / N_PROBLEMS, "well_formed": wf / N_PROBLEMS,
+               "match_rate": (match / total) if total else 1.0,
+               "tok_per_fwd": toks / fwd}
+        out[name] = row
+        if verbose:
+            print(f"  [table2b] {name:18s} f1={row['f1']:.2f} "
+                  f"wf={row['well_formed']:.2f} "
+                  f"match={row['match_rate']:.2f} "
+                  f"tok/fwd={row['tok_per_fwd']:.2f}", flush=True)
+        emit(f"table2b_ner_{name}", 0.0,
+             f"f1={row['f1']:.3f};wf={row['well_formed']:.3f};"
+             f"match={row['match_rate']:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

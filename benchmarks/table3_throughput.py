@@ -1,0 +1,90 @@
+"""Table 3 — constrained-generation overhead per grammar x method.
+
+Reports, per (grammar, method):
+  us/token        — wall time per generated token (CPU; absolute)
+  rel_throughput  — tokens/s relative to unconstrained on the same model
+  tok/fwd         — tokens per model forward (>1 = speculation wins; this
+                    is the hardware-independent speedup driver of Table 3)
+  mask_us/tok     — host-side constraint cost per token (DOMINO's
+                    precomputation advantage vs the online baseline)
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, get_model_and_params
+from repro.core import grammars
+from repro.serving import EngineConfig, ServingEngine
+
+GRAMMARS = {
+    "json": ("A JSON file describing a person: ", "json"),
+    "json_schema": ("Q: compute 3 + 4\nA: ", "json_gsm8k"),
+    "c": ("A C program: ", "c"),
+    "xml_schema": ("An XML file describing a person: ", "xml_schema"),
+    "template": ("A character profile for an RPG game in JSON format: ",
+                 "template_rpg"),
+}
+
+REPS = 4
+MAX_TOKENS = 56
+
+
+def methods(max_tokens):
+    return [
+        ("unconstrained", EngineConfig(mode="unconstrained",
+                                       max_tokens=max_tokens)),
+        ("online", EngineConfig(mode="online", max_tokens=max_tokens)),
+        ("domino", EngineConfig(mode="domino", max_tokens=max_tokens)),
+        ("domino_opp", EngineConfig(mode="domino", opportunistic=True,
+                                    max_tokens=max_tokens)),
+        ("domino_spec10", EngineConfig(mode="domino", speculative=True,
+                                       spec_s=10, spec_threshold=0.4,
+                                       max_tokens=max_tokens)),
+    ]
+
+
+def run(verbose: bool = True):
+    model, params, tok = get_model_and_params()
+    out = {}
+    for gname, (prompt, gkey) in GRAMMARS.items():
+        g = grammars.load(gkey)
+        base_tps = None
+        for mname, ecfg in methods(MAX_TOKENS):
+            eng = ServingEngine(model, params, tok,
+                                None if mname == "unconstrained" else g,
+                                ecfg, max_len=1024)
+            eng.generate(prompt)                   # warmup + spec prior
+            toks = fwd = 0
+            mask_t = model_t = wall = 0.0
+            for _ in range(REPS):
+                r = eng.generate(prompt)
+                toks += max(1, r.n_tokens)
+                fwd += r.n_forward_passes
+                mask_t += r.mask_time_s
+                model_t += r.model_time_s
+                wall += r.wall_time_s
+            tps = toks / wall
+            if mname == "unconstrained":
+                base_tps = tps
+            row = {
+                "us_per_token": 1e6 * wall / toks,
+                "rel_throughput": tps / base_tps,
+                "tok_per_fwd": toks / fwd,
+                "mask_us_per_token": 1e6 * mask_t / toks,
+            }
+            out[(gname, mname)] = row
+            if verbose:
+                print(f"  [table3] {gname:12s} {mname:14s} "
+                      f"rel={row['rel_throughput']:.2f}x "
+                      f"tok/fwd={row['tok_per_fwd']:.2f} "
+                      f"mask={row['mask_us_per_token']:.0f}us/tok",
+                      flush=True)
+            emit(f"table3_{gname}_{mname}", row["us_per_token"],
+                 f"rel={row['rel_throughput']:.3f};"
+                 f"tokfwd={row['tok_per_fwd']:.3f};"
+                 f"maskus={row['mask_us_per_token']:.1f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Run one forward + decode step of EVERY assigned architecture (reduced
+configs) — the 10-arch zoo as a selectable `--arch` flag, mirroring
+src/repro/launch/{train,serve}.py.
+
+  PYTHONPATH=src python examples/multiarch_smoke.py [--arch zamba2-1.2b]
+"""
+import argparse
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import ALIASES, get_config  # noqa: E402
+from repro.models import build_model  # noqa: E402
+
+
+def run_arch(arch: str) -> None:
+    cfg = get_config(arch, smoke=True)
+    m = build_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    t0 = time.perf_counter()
+    params = m.init(rng)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    batch = m.example_batch(2, 16, rng)
+    logits, aux = m.train_logits(
+        params, {k: (v[:, :-1] if k == "tokens" else v)
+                 for k, v in batch.items()})
+    cache = m.init_cache(2, 32)
+    pre = {k: (v[:, :8] if k == "tokens" else v) for k, v in batch.items()}
+    lg, cache = m.prefill(params, pre, cache)
+    tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+    lg2, cache = m.decode_step(params, cache, tok)
+    ok = not np.any(np.isnan(np.asarray(lg2, np.float32)))
+    print(f"{arch:24s} [{cfg.family:6s}] {n_params/1e6:6.2f}M params "
+          f"logits{tuple(logits.shape)} decode ok={ok} "
+          f"({time.perf_counter()-t0:.1f}s)", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ALIASES))
+    args = ap.parse_args()
+    for arch in ([args.arch] if args.arch else list(ALIASES)):
+        run_arch(arch)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,223 @@
+"""Vocabulary-aligned subterminal trees (Algorithm 2, §3.3).
+
+For every scanner position ``q`` we enumerate, for **every** vocabulary
+token, the subterminal sequences it induces, and organize them into a
+prefix tree ``T_q`` keyed by the *parser-relevant* (non-ignorable) terminal
+emissions.  Token ids are attached to the node reached by their emission
+sequence, bucketed by how the token *ends*:
+
+ - ``tokens_fresh``     — token ends exactly on a terminal boundary;
+ - ``tokens_partial``   — token ends mid-terminal; bucketed by the frozenset
+   of candidate terminal ids (the parser must accept at least one of them,
+   or the terminal must be ignorable, for the token to be legal).
+
+This is the precomputed data structure that makes DOMINO's mask computation
+independent of vocabulary size: at inference time we walk ``T_q`` (pruned by
+the parser, bounded by the lookahead ``k``) instead of scanning |V| tokens.
+
+Construction shares work across tokens by DFS over a byte *trie* of the
+vocabulary: all tokens with a common byte prefix reuse the same scanner
+branch frontier.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, FrozenSet, List, Optional, Tuple
+
+from repro.core.scanner import FRESH, Scanner
+
+
+class VocabTrie:
+    """Byte trie over the vocabulary (token id -> byte string)."""
+
+    __slots__ = ("children", "token_ids")
+
+    def __init__(self):
+        self.children: Dict[int, "VocabTrie"] = {}
+        self.token_ids: List[int] = []
+
+    @classmethod
+    def build(cls, vocab: List[Optional[bytes]]) -> "VocabTrie":
+        root = cls()
+        for tok_id, data in enumerate(vocab):
+            if data is None or len(data) == 0:
+                continue  # special tokens (EOS/PAD) handled by the decoder
+            node = root
+            for b in data:
+                nxt = node.children.get(b)
+                if nxt is None:
+                    nxt = cls()
+                    node.children[b] = nxt
+                node = nxt
+            node.token_ids.append(tok_id)
+        return root
+
+    def count_nodes(self) -> int:
+        n = 1
+        for c in self.children.values():
+            n += c.count_nodes()
+        return n
+
+
+class TreeNode:
+    __slots__ = ("children", "tokens_fresh", "tokens_partial")
+
+    def __init__(self):
+        self.children: Dict[int, "TreeNode"] = {}
+        self.tokens_fresh: List[int] = []
+        # frozenset of candidate partial-terminal ids -> token ids
+        self.tokens_partial: Dict[FrozenSet[int], List[int]] = {}
+
+    def size(self) -> int:
+        n = 1
+        for c in self.children.values():
+            n += c.size()
+        return n
+
+    def n_tokens(self) -> int:
+        n = len(self.tokens_fresh) + sum(
+            len(v) for v in self.tokens_partial.values())
+        for c in self.children.values():
+            n += c.n_tokens()
+        return n
+
+
+def _step_branches(scanner: Scanner, branches, byte: int):
+    """Advance every (emissions -> configuration-set) branch by one byte."""
+    starts = scanner.start_moves(byte)
+    ignore = scanner.ignore
+    new_branches: Dict[Tuple[int, ...], set] = {}
+    for ems, confs in branches.items():
+        direct = set()
+        emit_terminals = set()
+        for conf in confs:
+            if conf == ("FRESH",):
+                if starts:
+                    direct.update(starts)
+                continue
+            t, s = conf
+            dfa = scanner.dfas[t]
+            s2 = dfa.step(s, byte)
+            if s2 is not None:
+                direct.add((t, s2))
+            if dfa.is_accept(s):
+                emit_terminals.add(t)
+        if direct:
+            new_branches.setdefault(ems, set()).update(direct)
+        if starts:
+            for t in emit_terminals:
+                key = ems if t in ignore else ems + (t,)
+                new_branches.setdefault(key, set()).update(starts)
+    return new_branches
+
+
+class SubterminalTree:
+    def __init__(self, root: TreeNode, position):
+        self.root = root
+        self.position = position
+
+
+class TreeCache:
+    """Per-position subterminal trees with lazy construction + memoization.
+
+    ``precompute()`` runs the offline pass of the paper: BFS over all scanner
+    positions reachable through any vocabulary token, building every tree.
+    """
+
+    def __init__(self, scanner: Scanner, vocab: List[Optional[bytes]]):
+        self.scanner = scanner
+        self.vocab = vocab
+        self.trie = VocabTrie.build(vocab)
+        self.trees: Dict[object, SubterminalTree] = {}
+        self.build_time_s = 0.0
+
+    def tree(self, position) -> SubterminalTree:
+        key = position
+        t = self.trees.get(key)
+        if t is None:
+            t0 = time.perf_counter()
+            t = self._build(position)
+            self.build_time_s += time.perf_counter() - t0
+            self.trees[key] = t
+        return t
+
+    def precompute(self) -> Dict[str, float]:
+        """Offline pass: build trees for every reachable position.
+
+        Returns stats (number of positions, total build seconds).
+        """
+        t0 = time.perf_counter()
+        frontier = [FRESH]
+        seen = {FRESH}
+        while frontier:
+            pos = frontier.pop()
+            tree = self.tree(pos)
+            for nxt in self._reachable_positions(tree):
+                if nxt not in seen:
+                    seen.add(nxt)
+                    frontier.append(nxt)
+        return {
+            "positions": float(len(self.trees)),
+            "seconds": time.perf_counter() - t0,
+        }
+
+    def _reachable_positions(self, tree: SubterminalTree):
+        # Positions are recorded during construction; see _build.
+        return tree._positions  # type: ignore[attr-defined]
+
+    def _build(self, position) -> SubterminalTree:
+        scanner = self.scanner
+        root = TreeNode()
+        positions = set()
+
+        def leaf_nodes(ems: Tuple[int, ...]) -> TreeNode:
+            node = root
+            for t in ems:
+                nxt = node.children.get(t)
+                if nxt is None:
+                    nxt = TreeNode()
+                    node.children[t] = nxt
+                node = nxt
+            return node
+
+        def record(tok: int, branches) -> None:
+            ignore = scanner.ignore
+            seen_fresh = set()
+            seen_partial = set()
+            for ems, confs in branches.items():
+                real = frozenset(c for c in confs if c != ("FRESH",))
+                if real:
+                    tids = frozenset(t for (t, _s) in real)
+                    if (ems, tids) not in seen_partial:
+                        seen_partial.add((ems, tids))
+                        node = leaf_nodes(ems)
+                        node.tokens_partial.setdefault(tids, []).append(tok)
+                    positions.add(real)
+                if ("FRESH",) in confs and ems not in seen_fresh:
+                    seen_fresh.add(ems)
+                    leaf_nodes(ems).tokens_fresh.append(tok)
+                for (t, s) in real:
+                    if scanner.dfas[t].is_accept(s):
+                        key = ems if t in ignore else ems + (t,)
+                        if key not in seen_fresh:
+                            seen_fresh.add(key)
+                            leaf_nodes(key).tokens_fresh.append(tok)
+                            positions.add(FRESH)
+
+        if position is FRESH:
+            init = {(): {("FRESH",)}}
+        else:
+            init = {(): set(position)}
+
+        def dfs(trie_node: VocabTrie, branches) -> None:
+            for tok in trie_node.token_ids:
+                record(tok, branches)
+            for byte, child in trie_node.children.items():
+                nb = _step_branches(scanner, branches, byte)
+                if nb:
+                    dfs(child, nb)
+
+        dfs(self.trie, init)
+        tree = SubterminalTree(root, position)
+        tree._positions = positions  # type: ignore[attr-defined]
+        return tree

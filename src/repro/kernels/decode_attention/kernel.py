@@ -1,0 +1,99 @@
+"""Flash-decode GQA attention against a KV cache (Pallas TPU).
+
+The dominant bytes-consumer of ``decode_32k`` / ``long_500k``: one query
+token attends a T-long cache.  Arithmetic intensity is O(1) FLOP/byte, so
+the kernel's job is to stream K/V through VMEM exactly once with an
+online-softmax accumulator — no (T,) score vector in HBM, no second pass.
+
+Layout: q (B, G, Q, D) where G = n_kv heads and Q = n_q/G query heads per
+group; k/v (B, T, G, D); ``length`` (1,) int32 in SMEM masks unwritten
+cache slots.  Grid (B, G, T/BLOCK_T) — the T axis is minor, so VMEM
+scratch (m, l, acc) carries across cache tiles of one (batch, group).
+
+VMEM working set per step: BLOCK_T*(2D) halves of K/V + Q*D accumulators
+— with D=128, BLOCK_T=512: ~256 KiB, comfortably inside the ~16 MiB VMEM
+budget; BLOCK_T is the §Perf tuning knob.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            block_t: int, n_blocks: int, scale: float):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (Q, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)              # (BT, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)              # (BT, D)
+    length = len_ref[0]
+
+    s = jnp.dot(q, k.T) * scale                          # (Q, BT)
+    t_idx = j * block_t + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_t), 1)
+    s = jnp.where(t_idx < length, s, NEG)
+
+    m_prev = m_scr[...]                                  # (Q, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)                               # (Q, BT)
+    corr = jnp.exp(m_prev - m_new)                       # (Q, 1)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jnp.dot(p, v)   # (Q, D)
+    m_scr[...] = m_new
+
+    @pl.when(j == n_blocks - 1)
+    def _done():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_t", "interpret"))
+def decode_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                            length: jnp.ndarray, block_t: int = 512,
+                            interpret: bool = True) -> jnp.ndarray:
+    """q (B,G,Q,D); k,v (B,T,G,D); length () or (1,) int32 -> (B,G,Q,D)."""
+    b, g, nq, d = q.shape
+    t = k.shape[1]
+    if t % block_t != 0:
+        block_t = t
+    n_blocks = t // block_t
+    scale = 1.0 / (d ** 0.5)
+    length = jnp.reshape(length, (1,)).astype(jnp.int32)
+    kernel = functools.partial(_kernel, block_t=block_t, n_blocks=n_blocks,
+                               scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, g, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, nq, d), lambda i, h, j, *_: (i, h, 0, 0)),
+            pl.BlockSpec((1, block_t, 1, d), lambda i, h, j, *_: (i, j, h, 0)),
+            pl.BlockSpec((1, block_t, 1, d), lambda i, h, j, *_: (i, j, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, nq, d), lambda i, h, j, *_: (i, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((nq, 1), jnp.float32),
+            pltpu.VMEM((nq, 1), jnp.float32),
+            pltpu.VMEM((nq, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, g, nq, d), q.dtype),
+        interpret=interpret,
+    )(length, q, k, v)
+    return out

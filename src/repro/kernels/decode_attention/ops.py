@@ -1,0 +1,17 @@
+"""Jitted public wrapper for flash-decode attention."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def decode_attention(q, k, v, length, use_ref: bool = False,
+                     block_t: int = 512):
+    """q (B,G,Q,D); k,v (B,T,G,D); length () int32 -> (B,G,Q,D)."""
+    if use_ref:
+        return decode_attention_ref(q, k, v, length)
+    on_tpu = jax.default_backend() == "tpu"
+    return decode_attention_pallas(q, k, v, length, block_t=block_t,
+                                   interpret=not on_tpu)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the flash-decode kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, length):
+    """q (B,G,Q,D); k,v (B,T,G,D); length scalar -> (B,G,Q,D)."""
+    b, g, nq, d = q.shape
+    t = k.shape[1]
+    scale = 1.0 / (d ** 0.5)
+    s = jnp.einsum("bgqd,btgd->bgqt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    valid = jnp.arange(t) < length
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bgqt,btgd->bgqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,96 @@
+"""Selective-scan (Mamba1) kernel (Pallas TPU).
+
+The CUDA selective-scan kernel is re-thought for TPU (DESIGN.md §3): the
+recurrence h_t = exp(dt_t*A) h_{t-1} + (dt_t x_t) B_t is *sequential in
+time but dense in (channels x state)* — so the kernel keeps a
+(BLOCK_D, N) state tile resident in VMEM and walks the sequence with a
+``fori_loop``, vectorizing each step over channels and state on the VPU.
+The (B, S, d, N) discretized tensor that the pure-jnp path materializes in
+HBM never exists here: a_bar / b_bar are formed in-register per time step.
+
+Grid: (B, d/BLOCK_D, S/BLOCK_S), S minor => VMEM scratch h carries across
+sequence tiles of one (batch, channel-block).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(dt_ref, x_ref, b_ref, c_ref, a_ref, h0_ref, y_ref, hT_ref,
+            h_scr, *, block_s: int, n_sblocks: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    dt = dt_ref[0].astype(jnp.float32)       # (BS, BD)
+    xs = x_ref[0].astype(jnp.float32)        # (BS, BD)
+    bm = b_ref[0].astype(jnp.float32)        # (BS, N)
+    cm = c_ref[0].astype(jnp.float32)        # (BS, N)
+    a = a_ref[...].astype(jnp.float32)       # (BD, N)
+
+    def step(t, carry):
+        h, y = carry
+        dt_t = jax.lax.dynamic_slice_in_dim(dt, t, 1, 0)[0]      # (BD,)
+        x_t = jax.lax.dynamic_slice_in_dim(xs, t, 1, 0)[0]       # (BD,)
+        b_t = jax.lax.dynamic_slice_in_dim(bm, t, 1, 0)[0]       # (N,)
+        c_t = jax.lax.dynamic_slice_in_dim(cm, t, 1, 0)[0]       # (N,)
+        a_bar = jnp.exp(dt_t[:, None] * a)                       # (BD, N)
+        h = a_bar * h + (dt_t * x_t)[:, None] * b_t[None, :]
+        y_t = jnp.sum(h * c_t[None, :], axis=-1)                 # (BD,)
+        y = jax.lax.dynamic_update_slice_in_dim(y, y_t[None], t, 0)
+        return h, y
+
+    y0 = jnp.zeros(dt.shape, jnp.float32)
+    h, y = jax.lax.fori_loop(0, block_s, step, (h_scr[...], y0))
+    h_scr[...] = h
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(j == n_sblocks - 1)
+    def _done():
+        hT_ref[0] = h_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "block_s",
+                                             "interpret"))
+def mamba_scan_pallas(dt, x, bmat, cmat, a, h0, block_d: int = 512,
+                      block_s: int = 128, interpret: bool = True):
+    """dt/x (B,S,d); bmat/cmat (B,S,N); a (d,N); h0 (B,d,N)
+    -> y (B,S,d) fp32, hT (B,d,N) fp32."""
+    b, s, d = dt.shape
+    n = a.shape[1]
+    if d % block_d != 0:
+        block_d = d
+    if s % block_s != 0:
+        block_s = s
+    nd, ns = d // block_d, s // block_s
+    kernel = functools.partial(_kernel, block_s=block_s, n_sblocks=ns)
+    y, h_t = pl.pallas_call(
+        kernel,
+        grid=(b, nd, ns),
+        in_specs=[
+            pl.BlockSpec((1, block_s, block_d), lambda i, g, j: (i, j, g)),
+            pl.BlockSpec((1, block_s, block_d), lambda i, g, j: (i, j, g)),
+            pl.BlockSpec((1, block_s, n), lambda i, g, j: (i, j, 0)),
+            pl.BlockSpec((1, block_s, n), lambda i, g, j: (i, j, 0)),
+            pl.BlockSpec((block_d, n), lambda i, g, j: (g, 0)),
+            pl.BlockSpec((1, block_d, n), lambda i, g, j: (i, g, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_s, block_d), lambda i, g, j: (i, j, g)),
+            pl.BlockSpec((1, block_d, n), lambda i, g, j: (i, g, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, d, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, n), jnp.float32)],
+        interpret=interpret,
+    )(dt, x, bmat, cmat, a, h0)
+    return y, h_t

@@ -1,0 +1,16 @@
+"""Jitted public wrapper for the Mamba1 selective scan."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.mamba_scan.kernel import mamba_scan_pallas
+from repro.kernels.mamba_scan.ref import mamba_scan_ref
+
+
+def mamba_scan(dt, x, bmat, cmat, a, h0, use_ref: bool = False,
+               block_d: int = 512, block_s: int = 128):
+    if use_ref:
+        return mamba_scan_ref(dt, x, bmat, cmat, a, h0)
+    on_tpu = jax.default_backend() == "tpu"
+    return mamba_scan_pallas(dt, x, bmat, cmat, a, h0, block_d=block_d,
+                             block_s=block_s, interpret=not on_tpu)

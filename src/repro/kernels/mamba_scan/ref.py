@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the selective-scan kernel (direct recurrence)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_scan_ref(dt, x, bmat, cmat, a, h0):
+    """Same signature as the kernel: dt/x (B,S,d); bmat/cmat (B,S,N);
+    a (d,N); h0 (B,d,N) -> (y (B,S,d), hT (B,d,N)), fp32."""
+    dt = dt.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    bmat = bmat.astype(jnp.float32)
+    cmat = cmat.astype(jnp.float32)
+    a = a.astype(jnp.float32)
+
+    def step(h, inp):
+        dt_t, x_t, b_t, c_t = inp
+        a_bar = jnp.exp(dt_t[:, :, None] * a[None])        # (B,d,N)
+        h = a_bar * h + (dt_t * x_t)[:, :, None] * b_t[:, None, :]
+        y_t = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y_t
+
+    xs = (dt.swapaxes(0, 1), x.swapaxes(0, 1),
+          bmat.swapaxes(0, 1), cmat.swapaxes(0, 1))
+    h_t, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return ys.swapaxes(0, 1), h_t

@@ -1,0 +1,21 @@
+"""Jitted public wrapper: fused grammar-masked argmax.
+
+``masked_argmax(logits, mask)`` dispatches to the Pallas kernel on TPU and
+to the interpreted kernel (CPU validation) elsewhere; ``use_ref=True``
+selects the unfused jnp oracle (the baseline the §Perf analysis compares
+against).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.masked_sample.kernel import masked_argmax_pallas
+from repro.kernels.masked_sample.ref import masked_argmax_ref
+
+
+def masked_argmax(logits, mask, use_ref: bool = False, block_v: int = 2048):
+    if use_ref:
+        return masked_argmax_ref(logits, mask)
+    on_tpu = jax.default_backend() == "tpu"
+    return masked_argmax_pallas(logits, mask, block_v=block_v,
+                                interpret=not on_tpu)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fused masked-argmax kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = jnp.float32(-1e30)
+
+
+def masked_argmax_ref(logits: jnp.ndarray, mask: jnp.ndarray):
+    """logits (B, V), mask (B, V) -> (idx (B,) int32, val (B,) float32).
+
+    The unfused baseline: materializes the masked logits then reduces.
+    """
+    masked = jnp.where(mask != 0, logits.astype(jnp.float32), NEG)
+    idx = jnp.argmax(masked, axis=-1).astype(jnp.int32)
+    val = jnp.max(masked, axis=-1)
+    return idx, val

@@ -1,0 +1,97 @@
+"""Mamba2 SSD chunked scan (Pallas TPU).
+
+The SSD block-decomposition is the TPU-native form of the Mamba2
+recurrence (DESIGN.md §3): *within* a chunk the output is a masked,
+decay-weighted (lc x lc) attention-like matmul — MXU work — and *between*
+chunks only the (H, D, N) state is carried.  The kernel keeps that state
+in VMEM scratch across sequence tiles, so the only HBM traffic is the
+inputs once and the outputs once; the (B, S, H, D, N) discretized tensor
+of the naive formulation never exists.
+
+Grid (B, H/BLOCK_H, S/CHUNK), sequence minor.  VMEM per step:
+CHUNK*(BLOCK_H*D + 2N) input halves + (CHUNK x CHUNK) weight tile +
+(BLOCK_H, D, N) state — ~1 MiB at CHUNK=64, BLOCK_H=4, D=64, N=64.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, b_ref, c_ref, ld_ref, dt_ref, h0_ref, y_ref, hT_ref,
+            h_scr, *, n_chunks: int, chunk: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    xc = x_ref[0].astype(jnp.float32)       # (lc, BH, D)
+    bc = b_ref[0].astype(jnp.float32)       # (lc, N)
+    cc = c_ref[0].astype(jnp.float32)       # (lc, N)
+    ldc = ld_ref[0].astype(jnp.float32)     # (lc, BH)
+    dtc = dt_ref[0].astype(jnp.float32)     # (lc, BH)
+    h = h_scr[...]                           # (BH, D, N)
+
+    cum = jnp.cumsum(ldc, axis=0)            # (lc, BH)
+    cb = jnp.dot(cc, bc.T)                   # (lc, lc) — g=1, head-shared
+    dmat = cum.T[:, :, None] - cum.T[:, None, :]          # (BH, i, j)
+    mask = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))
+    w = cb[None, :, :] * jnp.where(mask[None], jnp.exp(dmat), 0.0)
+    xdt = xc * dtc[..., None]                # (lc, BH, D)
+    y_intra = jnp.einsum("hij,jhd->ihd", w, xdt)
+    y_state = jnp.einsum("in,hdn->ihd", cc, h) \
+        * jnp.exp(cum)[..., None]
+    y_ref[0] = (y_intra + y_state).astype(y_ref.dtype)
+
+    total = cum[-1]                          # (BH,)
+    rev = jnp.exp(total[None, :] - cum)      # (lc, BH)
+    h_scr[...] = h * jnp.exp(total)[:, None, None] + jnp.einsum(
+        "jhd,jn,jh->hdn", xdt, bc, rev)
+
+    @pl.when(j == n_chunks - 1)
+    def _done():
+        hT_ref[0] = h_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_h", "chunk",
+                                             "interpret"))
+def ssd_scan_pallas(x, b, c, ld, dt, h0, block_h: int = 4, chunk: int = 64,
+                    interpret: bool = True):
+    """x (B,S,H,D); b,c (B,S,N); ld,dt (B,S,H); h0 (B,H,D,N)
+    -> (y (B,S,H,D) fp32, hT (B,H,D,N) fp32)."""
+    bsz, s, h, d = x.shape
+    n = b.shape[-1]
+    if h % block_h != 0:
+        block_h = h
+    if s % chunk != 0:
+        chunk = s
+    nh, nc = h // block_h, s // chunk
+    kernel = functools.partial(_kernel, n_chunks=nc, chunk=chunk)
+    y, h_t = pl.pallas_call(
+        kernel,
+        grid=(bsz, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_h, d), lambda i, g, j: (i, j, g, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, g, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, g, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, block_h), lambda i, g, j: (i, j, g)),
+            pl.BlockSpec((1, chunk, block_h), lambda i, g, j: (i, j, g)),
+            pl.BlockSpec((1, block_h, d, n), lambda i, g, j: (i, g, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_h, d), lambda i, g, j: (i, j, g, 0)),
+            pl.BlockSpec((1, block_h, d, n), lambda i, g, j: (i, g, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, h, d), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, h, d, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_h, d, n), jnp.float32)],
+        interpret=interpret,
+    )(x, b, c, ld, dt, h0)
+    return y, h_t

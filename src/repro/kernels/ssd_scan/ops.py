@@ -1,0 +1,16 @@
+"""Jitted public wrapper for the Mamba2 SSD chunked scan."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+
+def ssd_scan(x, b, c, ld, dt, h0, use_ref: bool = False,
+             block_h: int = 4, chunk: int = 64):
+    if use_ref:
+        return ssd_scan_ref(x, b, c, ld, dt, h0, chunk=chunk)
+    on_tpu = jax.default_backend() == "tpu"
+    return ssd_scan_pallas(x, b, c, ld, dt, h0, block_h=block_h,
+                           chunk=chunk, interpret=not on_tpu)

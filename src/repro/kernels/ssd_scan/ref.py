@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for the Mamba2 SSD chunked scan (single group, g=1).
+
+Inputs (fp32):
+  x   (B, S, H, D)   gated inputs (already dt-scaled happens inside)
+  b   (B, S, N)      input projections (shared across heads, g=1)
+  c   (B, S, N)      output projections
+  ld  (B, S, H)      log decay  (dt * A, <= 0)
+  dt  (B, S, H)      step sizes
+  h0  (B, H, D, N)   incoming state
+Outputs: y (B, S, H, D) fp32, hT (B, H, D, N) fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, b, c, ld, dt, h0, chunk: int = 64):
+    bsz, s, h, d = x.shape
+    n = b.shape[-1]
+    nc = max(1, s // chunk)
+    assert s % nc == 0
+    lc = s // nc
+
+    def resh(t, extra):
+        return t.reshape((bsz, nc, lc) + extra).swapaxes(0, 1)
+
+    xs = resh(x.astype(jnp.float32), (h, d))
+    bc = resh(b.astype(jnp.float32), (n,))
+    cc = resh(c.astype(jnp.float32), (n,))
+    ldc = resh(ld.astype(jnp.float32), (h,))
+    dtc = resh(dt.astype(jnp.float32), (h,))
+
+    def step(hst, inp):
+        xc, bch, cch, ldch, dtch = inp
+        cum = jnp.cumsum(ldch, axis=1)                       # (B,lc,H)
+        cb = jnp.einsum("bin,bjn->bij", cch, bch)            # (B,lc,lc)
+        dmat = cum.transpose(0, 2, 1)[:, :, :, None] - \
+            cum.transpose(0, 2, 1)[:, :, None, :]            # (B,H,i,j)
+        mask = jnp.tril(jnp.ones((xc.shape[1], xc.shape[1]), bool))
+        w = cb[:, None] * jnp.where(mask, jnp.exp(dmat), 0.0)
+        xdt = xc * dtch[..., None]                           # (B,lc,H,D)
+        y_intra = jnp.einsum("bhij,bjhd->bihd", w, xdt)
+        y_state = jnp.einsum("bin,bhdn->bihd", cch, hst) \
+            * jnp.exp(cum)[..., None]
+        total = cum[:, -1]                                   # (B,H)
+        rev = jnp.exp(total[:, None] - cum)                  # (B,lc,H)
+        h_new = hst * jnp.exp(total)[..., None, None] + jnp.einsum(
+            "bjhd,bjn,bjh->bhdn", xdt, bch, rev)
+        return h_new, y_intra + y_state
+
+    h_t, ys = jax.lax.scan(step, h0.astype(jnp.float32),
+                           (xs, bc, cc, ldc, dtc))
+    y = ys.swapaxes(0, 1).reshape(bsz, s, h, d)
+    return y, h_t

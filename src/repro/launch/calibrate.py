@@ -1,0 +1,113 @@
+"""Collective-bytes trip-count calibration.
+
+XLA:CPU's HLO text contains each while-loop body once, so collectives
+inside the scan-over-layers are counted once instead of ``reps`` times.
+Fix by a two-point fit: compile the same (arch, shape) with the layer
+group repeated 1x and 2x; then per op type
+
+    bytes(R) = base + R * per_layer
+
+and the corrected total at the real R is base + R*per_layer.  For the
+encoder-decoder arch the encoder depth is scaled with R too (its real
+depth equals the decoder's), keeping the fit exact.
+
+Appends {"collectives_corrected": ..., "collective_bytes_corrected": N}
+to the dry-run record JSON.
+
+  PYTHONPATH=src python -m repro.launch.calibrate [--mesh 16x16]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import argparse
+import dataclasses
+import json
+import time
+
+from repro.configs import ALIASES, get_config
+from repro.configs.base import INPUT_SHAPES
+from repro.launch.dryrun import (ART, TRAIN_MICROBATCHES, applicable,
+                                 build_step, parse_collectives)
+from repro.launch import sharding
+from repro.launch.mesh import make_production_mesh
+
+
+def with_reps(cfg, r: int):
+    head, reps, group, tail = cfg.layer_program
+    real = [b for b in list(head) + list(group) * r + list(tail)
+            if b != "shared_attn"]
+    kw = dict(group_reps=r, n_layers=len(real))
+    if cfg.is_encoder_decoder:
+        kw["n_encoder_layers"] = r
+    return dataclasses.replace(cfg, **kw)
+
+
+def collect(cfg, shape, mesh, microbatches):
+    import jax
+    from repro.models import act_sharding
+    act_sharding.register_mesh(mesh)
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    act_sharding.configure(dp, "model")
+    fn, args, in_shard, donate = build_step(cfg, shape, mesh,
+                                            microbatches=microbatches)
+    named = sharding.to_named(mesh, in_shard)
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=named,
+                           donate_argnums=donate).lower(*args).compile()
+    return parse_collectives(compiled.as_text())
+
+
+def calibrate(arch: str, shape_name: str, multi_pod: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    ok, _ = applicable(cfg, shape)
+    if not ok:
+        return {}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mb = TRAIN_MICROBATCHES.get(arch, 1) if shape_name == "train_4k" else 1
+    c1 = collect(with_reps(cfg, 1), shape, mesh, mb)
+    c2 = collect(with_reps(cfg, 2), shape, mesh, mb)
+    _, reps, _, _ = cfg.layer_program
+    corrected = {}
+    total = 0.0
+    for op in c1:
+        per_layer = max(0.0, c2[op]["bytes"] - c1[op]["bytes"])
+        base = max(0.0, c1[op]["bytes"] - per_layer)
+        val = base + per_layer * reps
+        corrected[op] = {"bytes": val,
+                         "count_r1": c1[op]["count"],
+                         "per_layer_bytes": per_layer}
+        total += val
+    mesh_name = "pod2x16x16" if multi_pod else "16x16"
+    rec_path = ART / f"{arch}_{shape_name}_{mesh_name}.json"
+    if rec_path.exists():
+        rec = json.loads(rec_path.read_text())
+        rec["collectives_corrected"] = corrected
+        rec["collective_bytes_corrected"] = total
+        rec_path.write_text(json.dumps(rec, indent=1))
+    return {"total_bytes": total, "ops": corrected}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else list(ALIASES)
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    for a in archs:
+        for s in shapes:
+            t0 = time.perf_counter()
+            try:
+                out = calibrate(a, s, args.multi_pod)
+                if out:
+                    print(f"[cal] {a} x {s}: "
+                          f"{out['total_bytes']/2**20:.1f} MiB/device "
+                          f"({time.perf_counter()-t0:.0f}s)", flush=True)
+            except Exception as e:  # noqa: BLE001
+                print(f"[cal-FAIL] {a} x {s}: {type(e).__name__}: "
+                      f"{str(e)[:160]}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,374 @@
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape) combination, builds the production
+mesh, lowers the appropriate step function with ShapeDtypeStruct stand-ins
+(zero allocation), compiles it, and records:
+
+  - memory_analysis(): per-device argument/output/temp bytes (fits-check)
+  - cost_analysis(): per-device HLO FLOPs + bytes accessed
+  - the collective schedule: bytes moved per collective op, parsed from the
+    SPMD-partitioned HLO
+
+Shapes (assignment):
+  train_4k     train_step   (B=256, S=4096)
+  prefill_32k  prefill      (B=32,  S=32768)
+  decode_32k   serve_step   (B=128, one token, 32k cache)
+  long_500k    serve_step   (B=1,   one token, 512k cache) — sub-quadratic
+               archs only (see DESIGN.md §Arch-applicability)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                  # all 40
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape decode_32k
+  PYTHONPATH=src python -m repro.launch.dryrun --multi-pod      # 2x16x16
+
+Results append to artifacts/dryrun/<arch>_<shape>_<mesh>.json.
+"""
+# The VERY FIRST thing: 512 placeholder devices, before ANY jax import.
+import os  # noqa: E402
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import argparse
+import json
+import pathlib
+import re
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ALIASES, ARCH_IDS, get_config
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.launch import sharding
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.training import optimizer as opt
+
+ART = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+# long_500k applicability: sub-quadratic context handling only
+LONG_OK = {"llava-next-mistral-7b", "gemma3-27b", "zamba2-1.2b",
+           "falcon-mamba-7b"}
+
+# gradient-accumulation defaults for train_4k (global batch 256 preserved;
+# microbatching bounds per-device activation residency ~ 1/n)
+TRAIN_MICROBATCHES = {
+    "llava-next-mistral-7b": 8,
+    "yi-34b": 8,
+    "whisper-tiny": 1,
+    "gemma3-27b": 8,
+    "zamba2-1.2b": 8,
+    "falcon-mamba-7b": 4,
+    "minicpm-2b": 2,
+    "stablelm-1.6b": 2,
+    "arctic-480b": 8,
+    "deepseek-v3-671b": 8,
+}
+
+
+def applicable(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and cfg.arch_id not in LONG_OK:
+        return False, ("full-attention arch: long_500k skipped per "
+                       "DESIGN.md §Arch-applicability")
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# input specs
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this workload."""
+    dt = jnp.dtype(cfg.dtype)
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch: Dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((b, s + 1), jnp.int32)}
+        if cfg.family == "vlm":
+            p = cfg.n_prefix_tokens
+            batch["tokens"] = jax.ShapeDtypeStruct((b, s + 1 - p), jnp.int32)
+            batch["prefix"] = jax.ShapeDtypeStruct((b, p, cfg.d_model), dt)
+        if cfg.is_encoder_decoder:
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq_len, cfg.d_model), dt)
+        return batch
+    if shape.kind == "prefill":
+        inputs: Dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cfg.family == "vlm":
+            p = cfg.n_prefix_tokens
+            inputs["tokens"] = jax.ShapeDtypeStruct((b, s - p), jnp.int32)
+            inputs["prefix"] = jax.ShapeDtypeStruct((b, p, cfg.d_model), dt)
+        if cfg.is_encoder_decoder:
+            inputs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq_len, cfg.d_model), dt)
+        return inputs
+    # decode: ONE new token against a seq_len cache
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# HLO collective accounting
+# ---------------------------------------------------------------------------
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|s64|f64)"
+                       r"\[([0-9,]*)\]")
+_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+          "u8": 1, "pred": 1, "s64": 8, "f64": 8}
+
+
+def _result_bytes(line: str) -> int:
+    # "%x = (f32[..], f32[..]) all-gather(..." or "%x = f32[..] all-gather(..."
+    lhs = line.split(" = ", 1)
+    if len(lhs) != 2:
+        return 0
+    rhs = lhs[1]
+    head = rhs.split("(", 1)[0] if rhs.startswith(("(",)) is False else rhs
+    # take every shape that appears before the op name
+    op_pos = min((rhs.find(c) for c in _COLLECTIVES if rhs.find(c) >= 0),
+                 default=-1)
+    if op_pos < 0:
+        return 0
+    total = 0
+    for m in _SHAPE_RE.finditer(rhs[:op_pos]):
+        dt, dims = m.groups()
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo: str) -> Dict[str, Dict[str, float]]:
+    out: Dict[str, Dict[str, float]] = {
+        c: {"count": 0, "bytes": 0} for c in _COLLECTIVES}
+    for line in hlo.splitlines():
+        s = line.strip()
+        if " = " not in s:
+            continue
+        for c in _COLLECTIVES:
+            if re.search(rf"\)?\s{c}(-start|-done)?\(", s) or f" {c}(" in s:
+                if f"{c}-done" in s:
+                    continue  # avoid double counting start/done pairs
+                out[c]["count"] += 1
+                out[c]["bytes"] += _result_bytes(s)
+                break
+    return out
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+def build_step(cfg: ModelConfig, shape: InputShape, mesh,
+               opt_cfg: Optional[opt.AdamWConfig] = None,
+               microbatches: int = 1,
+               serve_fsdp: bool = True,
+               shard_logits_out: bool = False):
+    """Returns (fn, args_shapes, in_shardings, donate_argnums[, out_shard])."""
+    model = build_model(cfg)
+    sharding.set_axis_sizes(mesh)
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspec = sharding.param_specs(
+        cfg, params_shape,
+        fsdp=(True if shape.kind == "train" else serve_fsdp))
+    ispecs = input_specs(cfg, shape)
+    bspec = sharding.batch_specs(cfg, ispecs, shape.global_batch, dp)
+
+    if shape.kind == "train":
+        ocfg = opt_cfg or opt.AdamWConfig()
+        opt_shape = jax.eval_shape(lambda p: opt.init_state(p, ocfg),
+                                   params_shape)
+        ospec = sharding.opt_state_specs(pspec)
+
+        def train_step(params, state, batch):
+            if microbatches == 1:
+                (loss, _), grads = jax.value_and_grad(
+                    model.loss, has_aux=True)(params, batch)
+            else:
+                # gradient accumulation: same global batch, 1/n activation
+                # memory; grads accumulate in f32 (one extra sharded copy)
+                mb = jax.tree.map(
+                    lambda x: x.reshape(
+                        (microbatches, x.shape[0] // microbatches)
+                        + x.shape[1:]), batch)
+
+                def micro(acc, b):
+                    (l, _), g = jax.value_and_grad(
+                        model.loss, has_aux=True)(params, b)
+                    return jax.tree.map(
+                        lambda a, gg: a + gg.astype(jnp.float32), acc, g), l
+
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                grads, losses = jax.lax.scan(micro, g0, mb)
+                grads = jax.tree.map(lambda g: g / microbatches, grads)
+                loss = losses.mean()
+            params, state, om = opt.apply_updates(params, grads, state, ocfg)
+            return params, state, loss
+
+        args = (params_shape, opt_shape, ispecs)
+        shardings = (pspec, ospec, bspec)
+        return train_step, args, shardings, (0, 1)
+
+    max_len = shape.seq_len
+    cache_shape = model.cache_spec(shape.global_batch, max_len)
+    cspec = sharding.cache_specs(cfg, cache_shape, shape.global_batch, dp)
+
+    if shape.kind == "prefill":
+        def prefill_step(params, inputs, cache):
+            return model.prefill(params, inputs, cache)
+        return prefill_step, (params_shape, ispecs, cache_shape), \
+            (pspec, bspec, cspec), (2,)
+
+    def serve_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+    out = [serve_step, (params_shape, cache_shape, ispecs["tokens"]),
+           (pspec, cspec, bspec["tokens"]), (1,)]
+    if shard_logits_out:
+        # keep logits vocab-sharded on the way out: the engine applies the
+        # grammar mask per-shard (two-stage argmax), so gathering the full
+        # (B,1,V) logits is pure waste (§Perf pair 3)
+        b_ax = dp if shape.global_batch % 16 == 0 else None
+        logits_spec = P(b_ax, None,
+                        "model" if cfg.vocab_size % 16 == 0 else None)
+        out.append((logits_spec, cspec))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# the dry run
+# ---------------------------------------------------------------------------
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool = False,
+            save: bool = True, opt_cfg=None,
+            microbatches: int = 1,
+            cfg_override: Optional[ModelConfig] = None,
+            serve_fsdp: bool = True,
+            shard_logits_out: bool = False,
+            variant: str = "") -> Dict[str, Any]:
+    cfg = cfg_override or get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "16x16"
+    rec: Dict[str, Any] = {
+        "arch": cfg.arch_id, "shape": shape_name, "mesh": mesh_name,
+        "n_devices": 512 if multi_pod else 256,
+    }
+    if not ok:
+        rec["skipped"] = why
+        if save:
+            _save(rec)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    from repro.models import act_sharding
+    act_sharding.register_mesh(mesh)
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    act_sharding.configure(dp, "model")
+    built = build_step(cfg, shape, mesh, opt_cfg,
+                       microbatches=microbatches, serve_fsdp=serve_fsdp,
+                       shard_logits_out=shard_logits_out)
+    fn, args, in_shard, donate = built[:4]
+    out_shard = (sharding.to_named(mesh, built[4]) if len(built) > 4
+                 else None)
+    rec["microbatches"] = microbatches
+    if variant:
+        rec["variant"] = variant
+    named = sharding.to_named(mesh, in_shard)
+
+    t0 = time.perf_counter()
+    with mesh:
+        # donation mirrors production (cache updated in place; params/opt
+        # buffers reused across steps) and is what makes memory_analysis
+        # meaningful: without aliasing every cache write doubles the cache.
+        lowered = jax.jit(fn, in_shardings=named, out_shardings=out_shard,
+                          donate_argnums=donate).lower(*args)
+        rec["lower_s"] = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        rec["compile_s"] = time.perf_counter() - t0
+
+    ma = compiled.memory_analysis()
+    if ma is not None:
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_bytes_est": int(ma.argument_size_in_bytes
+                                  + ma.output_size_in_bytes
+                                  + ma.temp_size_in_bytes
+                                  - ma.alias_size_in_bytes),
+        }
+    ca = compiled.cost_analysis()
+    if ca:
+        rec["cost"] = {
+            "flops_per_device": float(ca.get("flops", 0.0)),
+            "bytes_per_device": float(ca.get("bytes accessed", 0.0)),
+        }
+    rec["collectives"] = parse_collectives(compiled.as_text())
+    rec["model_params"] = cfg.param_count()
+    rec["model_params_active"] = cfg.active_param_count()
+    if save:
+        _save(rec)
+    return rec
+
+
+def _save(rec: Dict[str, Any]) -> None:
+    ART.mkdir(parents=True, exist_ok=True)
+    suffix = f"_{rec['variant']}" if rec.get("variant") else ""
+    name = f"{rec['arch']}_{rec['shape']}_{rec['mesh']}{suffix}.json"
+    (ART / name.replace("/", "_")).write_text(json.dumps(rec, indent=1))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="arch id (dashed), default: all")
+    ap.add_argument("--shape", default=None,
+                    help="input shape name, default: all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ALIASES.keys())
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES.keys())
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_fail = 0
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                tag = f"{a} x {s} x {'2x16x16' if mp else '16x16'}"
+                try:
+                    t0 = time.perf_counter()
+                    mb = TRAIN_MICROBATCHES.get(a, 1) if s == "train_4k" else 1
+                    rec = run_one(a, s, multi_pod=mp, microbatches=mb)
+                    if "skipped" in rec:
+                        print(f"[skip] {tag}: {rec['skipped']}", flush=True)
+                        continue
+                    mem = rec.get("memory", {})
+                    print(f"[ok]   {tag}: compile={rec['compile_s']:.1f}s "
+                          f"flops/dev={rec['cost']['flops_per_device']:.3e} "
+                          f"arg={mem.get('argument_bytes', 0)/2**30:.2f}GiB "
+                          f"temp={mem.get('temp_bytes', 0)/2**30:.2f}GiB "
+                          f"({time.perf_counter()-t0:.0f}s)", flush=True)
+                except Exception as e:  # noqa: BLE001 — report and continue
+                    n_fail += 1
+                    print(f"[FAIL] {tag}: {type(e).__name__}: {e}",
+                          flush=True)
+    if n_fail:
+        raise SystemExit(f"{n_fail} combinations failed")
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

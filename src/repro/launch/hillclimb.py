@@ -1,0 +1,124 @@
+"""§Perf hillclimb driver: measure one (arch, shape, variant) —
+memory_analysis + 2-point-corrected collective bytes + roofline terms.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb gemma3-27b decode_32k \
+      --no-serve-fsdp --shard-logits --tag nofsdp_shardlogits
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import argparse
+import dataclasses
+import json
+import time
+
+from repro.configs import get_config
+from repro.configs.base import INPUT_SHAPES
+from repro.launch import calibrate as cal
+from repro.launch import sharding
+from repro.launch.dryrun import TRAIN_MICROBATCHES, build_step, \
+    parse_collectives, run_one
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import roofline
+
+
+def measure(arch: str, shape_name: str, tag: str = "base",
+            microbatches: int = 0, serve_fsdp: bool = True,
+            shard_logits: bool = False, kv_int8: bool = False,
+            capacity_factor: float = 0.0, opt_bf16: bool = False,
+            save: bool = True):
+    import jax
+    from repro.training import optimizer as opt
+    cfg = get_config(arch)
+    if kv_int8:
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    if capacity_factor > 0 and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe,
+                                         capacity_factor=capacity_factor))
+    ocfg = opt.AdamWConfig(state_dtype="bfloat16") if opt_bf16 else None
+    mb = microbatches or (TRAIN_MICROBATCHES.get(arch, 1)
+                          if shape_name == "train_4k" else 1)
+    rec = run_one(arch, shape_name, save=save, microbatches=mb,
+                  cfg_override=cfg, serve_fsdp=serve_fsdp,
+                  shard_logits_out=shard_logits, opt_cfg=ocfg,
+                  variant=(tag if tag != "base" else ""))
+
+    # 2-point collective correction on the SAME variant
+    mesh = make_production_mesh()
+    from repro.models import act_sharding
+    act_sharding.register_mesh(mesh)
+    act_sharding.configure(("data",), "model")
+
+    def collect(r):
+        c = cal.with_reps(cfg, r)
+        built = build_step(c, INPUT_SHAPES[shape_name], mesh,
+                           microbatches=mb, serve_fsdp=serve_fsdp,
+                           shard_logits_out=shard_logits)
+        fn, args, in_shard, donate = built[:4]
+        out_shard = (sharding.to_named(mesh, built[4]) if len(built) > 4
+                     else None)
+        named = sharding.to_named(mesh, in_shard)
+        with mesh:
+            compiled = jax.jit(fn, in_shardings=named,
+                               out_shardings=out_shard,
+                               donate_argnums=donate).lower(*args).compile()
+        return parse_collectives(compiled.as_text())
+
+    c1, c2 = collect(1), collect(2)
+    _, reps, _, _ = cfg.layer_program
+    total = 0.0
+    per_op = {}
+    for op in c1:
+        per_layer = max(0.0, c2[op]["bytes"] - c1[op]["bytes"])
+        base = max(0.0, c1[op]["bytes"] - per_layer)
+        per_op[op] = base + per_layer * reps
+        total += per_op[op]
+    rec["collective_bytes_corrected"] = total
+    rec["collectives_corrected_by_op"] = per_op
+
+    rf = roofline(arch, shape_name, "16x16", rec, coll_bytes=total,
+                  cfg=cfg, replicated_weights=not serve_fsdp)
+    mem = rec["memory"]
+    result = {
+        "tag": tag, "arch": arch, "shape": shape_name,
+        "compute_ms": rf["compute_s"] * 1e3,
+        "memory_ms": rf["memory_s"] * 1e3,
+        "collective_ms": rf["collective_s"] * 1e3,
+        "dominant": rf["dominant"],
+        "useful_flops_ratio": rf["useful_flops_ratio"],
+        "temp_gib": mem["temp_bytes"] / 2 ** 30,
+        "arg_gib": mem["argument_bytes"] / 2 ** 30,
+        "collective_bytes_per_dev": total,
+        "by_op_mib": {k: v / 2 ** 20 for k, v in per_op.items() if v},
+    }
+    out = cal.ART.parent / "hillclimb"
+    out.mkdir(parents=True, exist_ok=True)
+    (out / f"{arch}_{shape_name}_{tag}.json").write_text(
+        json.dumps(result, indent=1))
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--tag", default="base")
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--no-serve-fsdp", action="store_true")
+    ap.add_argument("--shard-logits", action="store_true")
+    ap.add_argument("--kv-int8", action="store_true")
+    ap.add_argument("--capacity", type=float, default=0.0)
+    ap.add_argument("--opt-bf16", action="store_true")
+    args = ap.parse_args()
+    t0 = time.perf_counter()
+    r = measure(args.arch, args.shape, tag=args.tag,
+                microbatches=args.microbatches,
+                serve_fsdp=not args.no_serve_fsdp,
+                shard_logits=args.shard_logits, kv_int8=args.kv_int8,
+                capacity_factor=args.capacity, opt_bf16=args.opt_bf16)
+    print(json.dumps(r, indent=1))
+    print(f"({time.perf_counter()-t0:.0f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) = 256 chips of TPU v5e.
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the pod axis extends
+data parallelism (weights replicated across pods; gradients cross pods
+once per step).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state — the dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count
+BEFORE any jax import (see dryrun.py).
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants (per chip) — see EXPERIMENTS.md §Roofline
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW = 50e9                 # B/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}; have {len(devs)} — the "
+            "dry-run must set XLA_FLAGS=--xla_force_host_platform_device_"
+            "count=512 before any jax import")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+        devices=devs[:n])
+
+
+def make_host_mesh():
+    """1-device mesh for smoke tests / local examples."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2,
+                         devices=jax.devices()[:1])
+
+
+def data_axes(mesh) -> tuple:
+    """The batch-sharding axes for this mesh."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,0 +1,75 @@
+"""Activation sharding constraints.
+
+XLA's SPMD propagation occasionally drops the batch sharding across
+reshape-heavy regions (blocked attention, loss) and then picks
+all-gather-the-world strategies for the adjacent matmuls.  The launchers
+register the mesh batch axes here; model code pins activations at the
+block boundaries (embedding output, per-layer hidden state, logits) with
+``with_sharding_constraint``.  Outside a mesh context (CPU smoke tests)
+the constraints are no-ops.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_BATCH_AXES: Optional[Tuple[str, ...]] = None
+_MODEL_AXIS: Optional[str] = None
+
+
+def configure(batch_axes: Optional[Tuple[str, ...]],
+              model_axis: Optional[str] = "model") -> None:
+    global _BATCH_AXES, _MODEL_AXIS
+    _BATCH_AXES = tuple(batch_axes) if batch_axes else None
+    _MODEL_AXIS = model_axis
+
+
+@contextlib.contextmanager
+def activation_sharding(batch_axes, model_axis="model"):
+    global _BATCH_AXES, _MODEL_AXIS
+    old = (_BATCH_AXES, _MODEL_AXIS)
+    configure(batch_axes, model_axis)
+    try:
+        yield
+    finally:
+        _BATCH_AXES, _MODEL_AXIS = old
+
+
+def constrain_batch(x):
+    """Pin dim0 to the batch axes, rest unspecified."""
+    if _BATCH_AXES is None:
+        return x
+    if x.shape[0] % _axis_prod(_BATCH_AXES) != 0:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, P(_BATCH_AXES, *([None] * (x.ndim - 1))))
+
+
+def constrain_logits(x):
+    """(B, S, V): batch over data axes, vocab over model."""
+    if _BATCH_AXES is None:
+        return x
+    b_ax = _BATCH_AXES if x.shape[0] % _axis_prod(_BATCH_AXES) == 0 else None
+    v_ax = _MODEL_AXIS if (_MODEL_AXIS and
+                           x.shape[-1] % _axis_prod((_MODEL_AXIS,)) == 0) \
+        else None
+    return jax.lax.with_sharding_constraint(
+        x, P(b_ax, *([None] * (x.ndim - 2)), v_ax))
+
+
+_SIZES = {}
+
+
+def register_mesh(mesh) -> None:
+    global _SIZES
+    _SIZES = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _axis_prod(axes) -> int:
+    n = 1
+    for a in axes:
+        n *= _SIZES.get(a, 1)
+    return n

@@ -1,0 +1,217 @@
+"""Blocked (flash-style) attention in pure JAX — memory-bounded reference.
+
+Full-sequence attention at 32k context would materialize (B, H, S, T)
+scores; instead we scan over query blocks and, inside, over KV blocks with
+an online-softmax accumulator, so the live intermediate is one
+(B, H, q_block, kv_block) tile.  This is the jnp oracle the Pallas
+``decode_attention`` kernel is validated against, and the default attention
+path for train/prefill at large S.
+
+GQA layout: q (B, S, G, Qh, D) where G = n_kv heads, Qh = n_q // n_kv;
+k/v (B, T, G, D).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def _bias_tile(q_pos, k_pos, window, k_valid):
+    """q_pos (B, qb), k_pos (B, kb) -> additive bias (B,1,1,qb,kb)."""
+    ok = k_pos[:, None, :] <= q_pos[:, :, None]
+    if window is not None:
+        ok &= k_pos[:, None, :] > (q_pos[:, :, None] - window)
+    if k_valid is not None:
+        ok &= k_valid[:, None, :]
+    return jnp.where(ok, 0.0, NEG)[:, None, None, :, :].astype(jnp.float32)
+
+
+def _blocks(x, n, blk):
+    """(B, n*blk, ...) -> (n, B, blk, ...)"""
+    b = x.shape[0]
+    return x.reshape((b, n, blk) + x.shape[2:]).swapaxes(0, 1)
+
+
+def _pick_blocks(s, t, q_block, kv_block):
+    if s % q_block != 0 or s <= q_block:
+        q_block = s
+    if t % kv_block != 0 or t <= kv_block:
+        kv_block = t
+    return q_block, kv_block
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 7, 8))
+def blocked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+                      window: Optional[int] = None,
+                      k_valid: Optional[jnp.ndarray] = None,
+                      q_block: int = 512, kv_block: int = 1024
+                      ) -> jnp.ndarray:
+    """q: (B,S,G,Qh,D); k,v: (B,T,G,D).  Returns (B,S,G,Qh,D).
+
+    custom_vjp: the backward recomputes the probability tiles flash-style
+    from the saved (out, lse) instead of differentiating through the scans
+    — without this, grad-of-scan stacks every (q_block x kv_block) tile
+    and training memory reverts to the full S x T attention matrix.
+    """
+    out, _lse = _flash_fwd_impl(q, k, v, q_pos, k_pos, window, k_valid,
+                                q_block, kv_block)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, q_pos, k_pos, window, k_valid,
+                    q_block, kv_block):
+    b, s, g, qh, d = q.shape
+    t = k.shape[1]
+    dv = v.shape[-1]
+    scale = 1.0 / math.sqrt(d)
+    q_block, kv_block = _pick_blocks(s, t, q_block, kv_block)
+    nq, nk = s // q_block, t // kv_block
+
+    q_t = _blocks(q, nq, q_block)
+    qp_t = _blocks(q_pos, nq, q_block)
+    k_t = _blocks(k, nk, kv_block)
+    v_t = _blocks(v, nk, kv_block)
+    kp_t = _blocks(k_pos, nk, kv_block)
+    kv_valid_t = None if k_valid is None else _blocks(k_valid, nk, kv_block)
+
+    def q_step(_, q_in):
+        qb, qp = q_in                           # (B,qb,G,Qh,D), (B,qb)
+
+        def kv_step(carry, kv_in):
+            m, l, acc = carry
+            if kv_valid_t is None:
+                kb, vb, kp = kv_in
+                kval = None
+            else:
+                kb, vb, kp, kval = kv_in
+            sc = jnp.einsum("bsgqd,btgd->bgqst", qb, kb) * scale
+            sc = sc.astype(jnp.float32) + _bias_tile(qp, kp, window, kval)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bgqst,btgd->bgqsd", p.astype(qb.dtype), vb).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, g, qh, q_block), NEG, jnp.float32)
+        l0 = jnp.zeros((b, g, qh, q_block), jnp.float32)
+        a0 = jnp.zeros((b, g, qh, q_block, dv), jnp.float32)
+        xs = (k_t, v_t, kp_t) if kv_valid_t is None else \
+            (k_t, v_t, kp_t, kv_valid_t)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), xs)
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))        # (B,G,Qh,qb)
+        return None, (out.transpose(0, 3, 1, 2, 4).astype(q.dtype), lse)
+
+    _, (out_blocks, lse_blocks) = jax.lax.scan(q_step, None, (q_t, qp_t))
+    out = out_blocks.swapaxes(0, 1).reshape(b, s, g, qh, dv)
+    # lse: (nq, B, G, Qh, qb) -> (B, G, Qh, S)
+    lse = lse_blocks.transpose(1, 2, 3, 0, 4).reshape(b, g, qh, s)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, q_pos, k_pos, window, k_valid, q_block, kv_block):
+    out, lse = _flash_fwd_impl(q, k, v, q_pos, k_pos, window, k_valid,
+                               q_block, kv_block)
+    return out, (q, k, v, q_pos, k_pos, k_valid, out, lse)
+
+
+def _flash_bwd(window, q_block, kv_block, res, dout):
+    q, k, v, q_pos, k_pos, k_valid, out, lse = res
+    b, s, g, qh, d = q.shape
+    t = k.shape[1]
+    dvd = v.shape[-1]
+    scale = 1.0 / math.sqrt(d)
+    q_block, kv_block = _pick_blocks(s, t, q_block, kv_block)
+    nq, nk = s // q_block, t // kv_block
+
+    # delta_i = rowsum(dO_i * O_i)  — flash-2 backward
+    delta = jnp.einsum("bsgqd,bsgqd->bgqs", dout.astype(jnp.float32),
+                       out.astype(jnp.float32))
+
+    q_t = _blocks(q, nq, q_block)
+    qp_t = _blocks(q_pos, nq, q_block)
+    do_t = _blocks(dout, nq, q_block)
+    k_t = _blocks(k, nk, kv_block)
+    v_t = _blocks(v, nk, kv_block)
+    kp_t = _blocks(k_pos, nk, kv_block)
+    kv_valid_t = None if k_valid is None else _blocks(k_valid, nk, kv_block)
+    lse_t = lse.reshape(b, g, qh, nq, q_block).transpose(3, 0, 1, 2, 4)
+    del_t = delta.reshape(b, g, qh, nq, q_block).transpose(3, 0, 1, 2, 4)
+
+    def q_step(carry, q_in):
+        dk_acc, dv_acc = carry                  # (nk,B,kb,G,D) fp32
+        qb, qp, dob, lse_i, del_i = q_in
+
+        def kv_step(_, kv_in):
+            if kv_valid_t is None:
+                kb, vb, kp = kv_in
+                kval = None
+            else:
+                kb, vb, kp, kval = kv_in
+            sc = jnp.einsum("bsgqd,btgd->bgqst", qb, kb) * scale
+            sc = sc.astype(jnp.float32) + _bias_tile(qp, kp, window, kval)
+            p = jnp.exp(sc - lse_i[..., None])               # (B,G,Qh,qb,kb)
+            dv_j = jnp.einsum("bgqst,bsgqd->btgd", p,
+                              dob.astype(jnp.float32))
+            dp = jnp.einsum("bsgqd,btgd->bgqst",
+                            dob.astype(jnp.float32),
+                            vb.astype(jnp.float32))
+            ds = p * (dp - del_i[..., None]) * scale
+            dq_ij = jnp.einsum("bgqst,btgd->bsgqd", ds,
+                               kb.astype(jnp.float32))
+            dk_j = jnp.einsum("bgqst,bsgqd->btgd", ds,
+                              qb.astype(jnp.float32))
+            return None, (dq_ij, dk_j, dv_j)
+
+        xs = (k_t, v_t, kp_t) if kv_valid_t is None else \
+            (k_t, v_t, kp_t, kv_valid_t)
+        _, (dq_stack, dk_stack, dv_stack) = jax.lax.scan(kv_step, None, xs)
+        dq_i = dq_stack.sum(axis=0)
+        return (dk_acc + dk_stack, dv_acc + dv_stack), dq_i
+
+    dk0 = jnp.zeros((nk, b, kv_block, g, d), jnp.float32)
+    dv0 = jnp.zeros((nk, b, kv_block, g, v.shape[-1]), jnp.float32)
+    (dk_b, dv_b), dq_blocks = jax.lax.scan(
+        q_step, (dk0, dv0), (q_t, qp_t, do_t, lse_t, del_t))
+    dq = dq_blocks.swapaxes(0, 1).reshape(b, s, g, qh, d).astype(q.dtype)
+    dk = dk_b.swapaxes(0, 1).reshape(b, t, g, d).astype(k.dtype)
+    dv = dv_b.swapaxes(0, 1).reshape(b, t, g, dvd).astype(v.dtype)
+    zero_valid = None if k_valid is None else _int_zero(k_valid)
+    return dq, dk, dv, _int_zero(q_pos), _int_zero(k_pos), zero_valid
+
+
+def _int_zero(x):
+    import numpy as _np
+    return _np.zeros(x.shape, jax.dtypes.float0)
+
+
+blocked_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def naive_attention(q, k, v, q_pos, k_pos, window=None, k_valid=None):
+    """Unblocked oracle (small shapes / decode)."""
+    b, s, g, qh, d = q.shape
+    scale = 1.0 / math.sqrt(d)
+    sc = jnp.einsum("bsgqd,btgd->bgqst", q, k) * scale
+    bias = _bias_tile(q_pos, k_pos, window, k_valid)
+    probs = jax.nn.softmax(sc.astype(jnp.float32) + bias, axis=-1)
+    out = jnp.einsum("bgqst,btgd->bsgqd", probs.astype(q.dtype), v)
+    return out
+
+
+def attention_any(q, k, v, q_pos, k_pos, window=None, k_valid=None,
+                  blocked_threshold: int = 1024):
+    """Dispatch: blocked for long sequences, naive for short/decode."""
+    s, t = q.shape[1], k.shape[1]
+    if s * t >= blocked_threshold * blocked_threshold:
+        return blocked_attention(q, k, v, q_pos, k_pos, window, k_valid)
+    return naive_attention(q, k, v, q_pos, k_pos, window, k_valid)

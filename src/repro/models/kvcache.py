@@ -1,0 +1,127 @@
+"""Decode caches for every block kind.
+
+Cache layout (all static shapes — TPU/XLA friendly):
+ - full attention: k/v (B, T_max, n_kv, d_head); validity = pos < len
+ - sliding window: ring buffers (B, W, n_kv, d_head) + slot->position map
+ - MLA: the compressed latent (B, T_max, r_kv) + rope key (B, T_max, 1, dr)
+ - SSM: conv state (B, K-1, C) + recurrent state (fp32)
+ - cross-attention (whisper): encoder k/v, written once at prefill
+
+The cache for a scanned group of layers is the same pytree with a leading
+``reps`` axis, so it can be fed through ``jax.lax.scan`` together with the
+stacked layer params.  ``len`` is a single int32 scalar for the whole model
+(batch-synchronous decoding).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def block_cache_spec(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                     dtype) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for one block's cache (used by init and dry-run)."""
+    nkv, dh = cfg.n_kv_heads, cfg.d_head
+    quant = cfg.kv_cache_dtype == "int8"
+    kv_dt = jnp.int8 if quant else dtype
+
+    def _kv(t):
+        spec = {
+            "k": jax.ShapeDtypeStruct((batch, t, nkv, dh), kv_dt),
+            "v": jax.ShapeDtypeStruct((batch, t, nkv, dh), kv_dt),
+        }
+        if quant:
+            spec["k_scale"] = jax.ShapeDtypeStruct((batch, t, nkv),
+                                                   jnp.bfloat16)
+            spec["v_scale"] = jax.ShapeDtypeStruct((batch, t, nkv),
+                                                   jnp.bfloat16)
+        return spec
+
+    if kind in ("attn", "shared_attn"):
+        return _kv(max_len)
+    if kind == "swa":
+        w = min(cfg.sliding_window or max_len, max_len)
+        spec = _kv(w)
+        spec["pos"] = jax.ShapeDtypeStruct((w,), jnp.int32)
+        return spec
+    if kind == "mla":
+        m = cfg.mla
+        return {
+            "ckv": jax.ShapeDtypeStruct((batch, max_len, m.kv_lora_rank),
+                                        dtype),
+            "krope": jax.ShapeDtypeStruct(
+                (batch, max_len, 1, m.qk_rope_head_dim), dtype),
+        }
+    if kind == "moe":
+        base = "mla" if cfg.mla is not None else "attn"
+        return block_cache_spec(cfg, base, batch, max_len, dtype)
+    if kind in ("mamba1", "mamba2"):
+        s = cfg.ssm
+        d_in = s.expand * cfg.d_model
+        if s.version == 1 and kind == "mamba1":
+            conv_c = d_in
+            state_shape = (batch, d_in, s.d_state)
+        else:
+            conv_c = d_in + 2 * s.n_groups * s.d_state
+            nh = d_in // s.head_dim
+            state_shape = (batch, nh, s.head_dim, s.d_state)
+        return {
+            "conv": jax.ShapeDtypeStruct((batch, s.d_conv - 1, conv_c),
+                                         dtype),
+            "ssm": jax.ShapeDtypeStruct(state_shape, jnp.float32),
+        }
+    if kind == "xattn":
+        spec = block_cache_spec(cfg, "attn", batch, max_len, dtype)
+        spec["xk"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_seq_len, nkv, dh), dtype)
+        spec["xv"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_seq_len, nkv, dh), dtype)
+        return spec
+    raise ValueError(kind)
+
+
+def _zeros_like_spec(spec):
+    def mk(s):
+        if s.dtype == jnp.int32:  # slot->position maps start invalid
+            return jnp.full(s.shape, -1, jnp.int32)
+        return jnp.zeros(s.shape, s.dtype)
+    return jax.tree.map(mk, spec)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Concrete zero cache matching cache_spec()."""
+    return jax.tree.map(lambda s: s, _cache_build(
+        cfg, batch, max_len, concrete=True))
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int):
+    """ShapeDtypeStruct pytree (for .lower() in the dry-run)."""
+    return _cache_build(cfg, batch, max_len, concrete=False)
+
+
+def _cache_build(cfg: ModelConfig, batch: int, max_len: int, concrete: bool):
+    dtype = jnp.dtype(cfg.dtype)
+    head, reps, group, tail = cfg.layer_program
+
+    def one(kind):
+        spec = block_cache_spec(cfg, kind, batch, max_len, dtype)
+        return _zeros_like_spec(spec) if concrete else spec
+
+    def stacked(kind):
+        spec = block_cache_spec(cfg, kind, batch, max_len, dtype)
+        spec = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((reps,) + s.shape, s.dtype), spec)
+        return _zeros_like_spec(spec) if concrete else spec
+
+    cache = {
+        "len": (jnp.zeros((), jnp.int32) if concrete
+                else jax.ShapeDtypeStruct((), jnp.int32)),
+        "head": [one(k) for k in head],
+        "group": {f"b{i}": stacked(k) for i, k in enumerate(group)},
+        "tail": [one(k) for k in tail],
+    }
+    return cache

@@ -1,0 +1,388 @@
+"""Core transformer layers: norms, RoPE, attention (GQA / SWA / MLA),
+dense MLP and MoE — functional style (param dicts in, arrays out).
+
+Conventions:
+ - params are nested dicts of jnp arrays; init fns take an ``rng`` and
+   config and return the dict; apply fns mirror them.
+ - activations are ``cfg.dtype`` (bf16 at full scale), reductions
+   (softmax/norm/router) in float32.
+ - attention is exposed in three entry modes: full-sequence causal
+   (train/prefill), and single/multi-token decode against a KV cache
+   (multi-token = speculative verification, §3.6 of the paper).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
+
+Params = Dict[str, jnp.ndarray]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(rng, shape, scale: Optional[float] = None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(rng, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(params: Params, x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    # Variance in f32, but the (B,S,D)-sized products stay in x.dtype: a
+    # full-width f32 intermediate here becomes the residual XLA saves per
+    # scanned layer under remat (2x activation memory at bf16 training).
+    var = jnp.mean(x.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * params["scale"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]     # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional sliding window)
+# ---------------------------------------------------------------------------
+
+
+def attention_init(rng, cfg: ModelConfig) -> Params:
+    d, dh = cfg.d_model, cfg.d_head
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    dt = _dtype(cfg)
+    ks = jax.random.split(rng, 4)
+    return {
+        "wq": dense_init(ks[0], (d, nq * dh), dtype=dt),
+        "wk": dense_init(ks[1], (d, nkv * dh), dtype=dt),
+        "wv": dense_init(ks[2], (d, nkv * dh), dtype=dt),
+        "wo": dense_init(ks[3], (nq * dh, d), dtype=dt),
+    }
+
+
+def _split_heads(x, n_heads, d_head):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, d_head)
+
+
+def _gqa_scores_and_out(q, k, v, bias):
+    """q: (B,S,nq,D), k/v: (B,T,nkv,D), bias: (B,1,1,S,T) additive.
+
+    Grouped-query attention: nq = G*Q where G = nkv.
+    """
+    b, s, nq, d = q.shape
+    t, nkv = k.shape[1], k.shape[2]
+    qg = q.reshape(b, s, nkv, nq // nkv, d)
+    scores = jnp.einsum("bsgqd,btgd->bgqst", qg, k) / math.sqrt(d)
+    scores = scores.astype(jnp.float32) + bias
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgqst,btgd->bsgqd", probs, v)
+    return out.reshape(b, s, nq, d)
+
+
+def causal_bias(q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+                window: Optional[int] = None,
+                k_valid: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Additive attention bias.
+
+    q_pos: (B, S) absolute positions of queries; k_pos: (B, T) of keys.
+    window: sliding-window size (None = full causal).
+    k_valid: (B, T) bool — False for unwritten cache slots.
+    Returns (B, 1, 1, S, T) float32.
+    """
+    ok = k_pos[:, None, :] <= q_pos[:, :, None]
+    if window is not None:
+        ok &= k_pos[:, None, :] > (q_pos[:, :, None] - window)
+    if k_valid is not None:
+        ok &= k_valid[:, None, :]
+    return jnp.where(ok, 0.0, -1e30)[:, None, None, :, :].astype(jnp.float32)
+
+
+def attention_apply(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+                    q_pos: jnp.ndarray,
+                    kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+                    k_pos: Optional[jnp.ndarray] = None,
+                    window: Optional[int] = None,
+                    k_valid: Optional[jnp.ndarray] = None,
+                    cross: bool = False) -> jnp.ndarray:
+    """x: (B,S,D).  If kv given, attend to it (decode / cross-attention);
+    else self-attention over x.  Returns (B,S,D)."""
+    nq, nkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = _split_heads(x @ params["wq"], nq, dh)
+    if kv is None:
+        k = _split_heads(x @ params["wk"], nkv, dh)
+        v = _split_heads(x @ params["wv"], nkv, dh)
+        k_pos = q_pos
+    else:
+        k, v = kv
+    if not cross:
+        q = rope(q, q_pos, cfg.rope_theta)
+        if kv is None:
+            k = rope(k, k_pos, cfg.rope_theta)
+    if cross:
+        bias = jnp.zeros((), jnp.float32) if k_valid is None else \
+            jnp.where(k_valid, 0.0, -1e30)[:, None, None, None, :]
+    else:
+        bias = causal_bias(q_pos, k_pos, window, k_valid)
+    out = _gqa_scores_and_out(q, k, v, bias)
+    b, s = out.shape[:2]
+    return out.reshape(b, s, nq * dh) @ params["wo"]
+
+
+def attention_project_kv(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+                         k_pos: Optional[jnp.ndarray] = None,
+                         use_rope: bool = True):
+    """Project k/v for cache writes.  x: (B,S,D) -> k,v: (B,S,nkv,dh)."""
+    nkv, dh = cfg.n_kv_heads, cfg.d_head
+    k = _split_heads(x @ params["wk"], nkv, dh)
+    v = _split_heads(x @ params["wv"], nkv, dh)
+    if use_rope and k_pos is not None:
+        k = rope(k, k_pos, cfg.rope_theta)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(rng, cfg: ModelConfig) -> Params:
+    m = cfg.mla
+    d, nq = cfg.d_model, cfg.n_heads
+    dt = _dtype(cfg)
+    ks = jax.random.split(rng, 8)
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": dense_init(ks[0], (d, m.q_lora_rank), dtype=dt),
+        "q_norm": rmsnorm_init(m.q_lora_rank, dt),
+        "wq_b": dense_init(ks[1], (m.q_lora_rank, nq * qk_dim), dtype=dt),
+        "wkv_a": dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim),
+                            dtype=dt),
+        "kv_norm": rmsnorm_init(m.kv_lora_rank, dt),
+        "wkv_b": dense_init(
+            ks[3], (m.kv_lora_rank, nq * (m.qk_nope_head_dim + m.v_head_dim)),
+            dtype=dt),
+        "wo": dense_init(ks[4], (nq * m.v_head_dim, d), dtype=dt),
+    }
+
+
+def mla_compress(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+                 k_pos: jnp.ndarray):
+    """The cached latent: compressed kv (B,S,r) + rope key (B,S,1,dr)."""
+    m = cfg.mla
+    kv = x @ params["wkv_a"]
+    c_kv, k_rope = kv[..., :m.kv_lora_rank], kv[..., m.kv_lora_rank:]
+    c_kv = rmsnorm(params["kv_norm"], c_kv, cfg.rms_eps)
+    k_rope = rope(k_rope[:, :, None, :], k_pos, cfg.rope_theta)
+    return c_kv, k_rope
+
+
+def _mla_q(params: Params, cfg: ModelConfig, x, q_pos):
+    m = cfg.mla
+    nq = cfg.n_heads
+    b, s, _ = x.shape
+    q = rmsnorm(params["q_norm"], x @ params["wq_a"], cfg.rms_eps) \
+        @ params["wq_b"]
+    q = q.reshape(b, s, nq, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_rope = rope(q_rope, q_pos, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_uk_uv(params: Params, cfg: ModelConfig):
+    m = cfg.mla
+    w = params["wkv_b"].reshape(
+        m.kv_lora_rank, cfg.n_heads, m.qk_nope_head_dim + m.v_head_dim)
+    return w[..., :m.qk_nope_head_dim], w[..., m.qk_nope_head_dim:]
+
+
+def mla_apply(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+              q_pos: jnp.ndarray, latent: Tuple[jnp.ndarray, jnp.ndarray],
+              k_pos: jnp.ndarray,
+              k_valid: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Full (non-absorbed) MLA: materializes per-head K/V from the latent
+    and runs blocked flash attention.  Used for train/prefill where S ~ T
+    and the K/V materialization is the same order as the activations.
+
+    x: (B,S,D); latent = (c_kv (B,T,r), k_rope (B,T,1,dr)).
+    """
+    from repro.models.flash import attention_any  # local: avoid cycle
+    m = cfg.mla
+    nq = cfg.n_heads
+    b, s, _ = x.shape
+    c_kv, k_rope = latent
+    t = c_kv.shape[1]
+    q_nope, q_rope = _mla_q(params, cfg, x, q_pos)
+    kvb = (c_kv @ params["wkv_b"]).reshape(
+        b, t, nq, m.qk_nope_head_dim + m.v_head_dim)
+    k_nope, v = kvb[..., :m.qk_nope_head_dim], kvb[..., m.qk_nope_head_dim:]
+    # assemble MHA layout (G=nq, Qh=1) with concatenated nope||rope dims
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)[:, :, :, None, :] \
+        .transpose(0, 1, 2, 3, 4)                       # (B,S,H,1,dn+dr)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, t, nq, m.qk_rope_head_dim))],
+        axis=-1)                                         # (B,T,H,dn+dr)
+    q_full = q_full.reshape(b, s, nq, 1, m.qk_nope_head_dim
+                            + m.qk_rope_head_dim)
+    out = attention_any(q_full, k_full, v, q_pos, k_pos, None, k_valid)
+    out = out.reshape(b, s, nq * m.v_head_dim)
+    return out @ params["wo"]
+
+
+def mla_apply_absorbed(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+                       q_pos: jnp.ndarray,
+                       latent: Tuple[jnp.ndarray, jnp.ndarray],
+                       k_pos: jnp.ndarray,
+                       k_valid: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Absorbed MLA decode (DeepSeek-V3): W_uk folds into the query and
+    W_uv into the output, so attention runs directly against the compressed
+    (B,T,r) latent — the whole point of MLA's small cache.  Never
+    materializes per-head K/V of the context.
+    """
+    m = cfg.mla
+    nq = cfg.n_heads
+    b, s, _ = x.shape
+    c_kv, k_rope = latent
+    t = c_kv.shape[1]
+    q_nope, q_rope = _mla_q(params, cfg, x, q_pos)
+    w_uk, w_uv = _mla_uk_uv(params, cfg)
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)    # (B,S,H,r)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    scores = (jnp.einsum("bshr,btr->bhst", q_lat, c_kv)
+              + jnp.einsum("bshd,btd->bhst", q_rope, k_rope[:, :, 0]))
+    scores = scores.astype(jnp.float32) * scale
+    bias = causal_bias(q_pos, k_pos, None, k_valid)[:, :, 0]  # (B,1,S,T)
+    probs = jax.nn.softmax(scores + bias, axis=-1).astype(x.dtype)
+    ctx_lat = jnp.einsum("bhst,btr->bshr", probs, c_kv)    # (B,S,H,r)
+    out = jnp.einsum("bshr,rhd->bshd", ctx_lat, w_uv)
+    return out.reshape(b, s, nq * m.v_head_dim) @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# MLP / MoE
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(rng, d: int, f: int, dtype) -> Params:
+    ks = jax.random.split(rng, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d, f), dtype=dtype),
+        "w_up": dense_init(ks[1], (d, f), dtype=dtype),
+        "w_down": dense_init(ks[2], (f, d), dtype=dtype),
+    }
+
+
+def mlp_apply(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return (jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])) \
+        @ params["w_down"]
+
+
+def moe_init(rng, cfg: ModelConfig) -> Params:
+    mo = cfg.moe
+    d, fe = cfg.d_model, mo.d_ff_expert
+    dt = _dtype(cfg)
+    ks = jax.random.split(rng, 6)
+    p: Params = {
+        "router": dense_init(ks[0], (d, mo.n_experts), dtype=jnp.float32),
+        "w_gate": dense_init(ks[1], (mo.n_experts, d, fe), dtype=dt),
+        "w_up": dense_init(ks[2], (mo.n_experts, d, fe), dtype=dt),
+        "w_down": dense_init(ks[3], (mo.n_experts, fe, d), dtype=dt),
+    }
+    if mo.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], d, fe * mo.n_shared_experts, dt)
+    if mo.dense_residual_d_ff:
+        p["dense"] = mlp_init(ks[5], d, mo.dense_residual_d_ff, dt)
+    return p
+
+
+MOE_GROUP_TOKENS = 2048
+
+
+def moe_apply(params: Params, cfg: ModelConfig, x: jnp.ndarray
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Token-choice top-k routing with GROUP-LIMITED capacity-bounded
+    einsum dispatch (GShard-style — static shapes, expert-parallel friendly
+    on TPU).  Tokens are split into contiguous groups of ~2048 and each
+    group dispatches independently: the one-hot dispatch einsum is then
+    O(N * group * k * cf * D) instead of O(N^2 * k * cf * D) — dispatch
+    FLOPs stay a small constant fraction of expert FLOPs at any batch.
+
+    Returns (output, router aux loss).
+    """
+    mo = cfg.moe
+    b, s, d = x.shape
+    n_tok = b * s
+    e, k = mo.n_experts, mo.top_k
+    # group split (G=1 covers decode and non-divisible cases)
+    g = n_tok // MOE_GROUP_TOKENS if n_tok % MOE_GROUP_TOKENS == 0 else 1
+    ng = n_tok // g
+    xt = x.reshape(g, ng, d)
+    logits = (xt.astype(jnp.float32) @ params["router"])        # (G, Ng, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)             # (G, Ng, k)
+    gate_vals = gate_vals / jnp.clip(
+        gate_vals.sum(-1, keepdims=True), 1e-9)                 # renorm top-k
+    # load-balance aux loss (Switch): e * sum_e f_e * p_e, over all tokens
+    me = probs.mean(axis=(0, 1))
+    one_hot_top1 = jax.nn.one_hot(expert_idx[..., 0], e, dtype=jnp.float32)
+    ce = one_hot_top1.mean(axis=(0, 1))
+    aux = mo.router_aux_coef * e * jnp.sum(me * ce)
+
+    cap = max(1, int(math.ceil(ng * k / e * mo.capacity_factor)))
+    cap = min(cap, ng)
+    # position of each (token, slot) within its expert's per-group buffer
+    oh = jax.nn.one_hot(expert_idx, e, dtype=jnp.int32)         # (G, Ng, k, E)
+    flat_oh = oh.reshape(g, ng * k, e)
+    pos_in_expert = (jnp.cumsum(flat_oh, axis=1) - flat_oh).reshape(
+        g, ng, k, e)
+    pos = jnp.sum(pos_in_expert * oh, axis=-1)                  # (G, Ng, k)
+    keep = pos < cap
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=x.dtype)            # (G, Ng, k, C)
+    disp = jnp.einsum("gnke,gnkc->gnec", oh.astype(x.dtype)
+                      * keep[..., None].astype(x.dtype), pos_oh)
+    comb = jnp.einsum("gnke,gnkc,gnk->gnec", oh.astype(jnp.float32),
+                      pos_oh.astype(jnp.float32),
+                      gate_vals.astype(jnp.float32)).astype(x.dtype)
+    xe = jnp.einsum("gnec,gnd->gecd", disp, xt)                 # (G, E, C, D)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, params["w_gate"])) \
+        * jnp.einsum("gecd,edf->gecf", xe, params["w_up"])
+    ye = jnp.einsum("gecf,efd->gecd", h, params["w_down"])      # (G, E, C, D)
+    out = jnp.einsum("gnec,gecd->gnd", comb, ye)
+    xt_flat = xt.reshape(n_tok, d)
+    out = out.reshape(n_tok, d)
+    if "shared" in params:
+        out = out + mlp_apply(params["shared"], xt_flat)
+    if "dense" in params:
+        out = out + mlp_apply(params["dense"], xt_flat)
+    return out.reshape(b, s, d), aux

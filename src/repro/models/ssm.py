@@ -1,0 +1,285 @@
+"""State-space blocks: Mamba1 (selective scan) and Mamba2 (SSD).
+
+Hardware adaptation (DESIGN.md §3): the CUDA selective-scan kernel is
+replaced by TPU-friendly formulations —
+
+ - Mamba1: chunked associative scan. ``jax.lax.scan`` over sequence chunks
+   carries the (B, d_inner, N) state; within a chunk
+   ``jax.lax.associative_scan`` runs in fp32.  The (B, Lc, d, N) chunk
+   tensor is the only large intermediate; with d_inner sharded over the
+   model axis and batch over data it stays in the MiB range per device.
+   The Pallas kernel (repro/kernels/mamba_scan) keeps it in VMEM.
+
+ - Mamba2: SSD block-decomposition — *quadratic attention-like matmuls
+   within chunks* (MXU-friendly) + scalar-decay state passing between
+   chunks.  No (B,S,nh,hd,N) materialization at all.
+
+Decode is the O(1) recurrent step in both cases, with the state carried in
+the serving cache.  Speculative verification (multi-token decode) uses the
+same chunked path with a state checkpoint for rollback (§Arch-applicability
+of DESIGN.md).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init
+
+Params = Dict[str, jnp.ndarray]
+
+CHUNK = 128
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba1
+# ---------------------------------------------------------------------------
+
+
+def mamba1_init(rng, cfg: ModelConfig) -> Params:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    dt_rank = max(1, d // 16)
+    dt = _dt(cfg)
+    ks = jax.random.split(rng, 6)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in), dtype=dt),
+        "conv_w": dense_init(ks[1], (s.d_conv, d_in), dtype=dt),
+        "conv_b": jnp.zeros((d_in,), dtype=dt),
+        "x_proj": dense_init(ks[2], (d_in, dt_rank + 2 * s.d_state), dtype=dt),
+        "dt_proj": dense_init(ks[3], (dt_rank, d_in), dtype=dt),
+        "dt_bias": jnp.zeros((d_in,), dtype=jnp.float32),
+        "A_log": jnp.log(jnp.tile(
+            jnp.arange(1, s.d_state + 1, dtype=jnp.float32)[None, :],
+            (d_in, 1))),                                  # (d_in, N)
+        "D": jnp.ones((d_in,), dtype=jnp.float32),
+        "out_proj": dense_init(ks[4], (d_in, d), dtype=dt),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv.  x: (B,S,C), w: (K,C).  state: (B,K-1,C)
+    previous inputs (for decode continuity).  Returns (y, new_state)."""
+    k = w.shape[0]
+    bsz, s, c = x.shape
+    if state is None:
+        state = jnp.zeros((bsz, k - 1, c), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)          # (B, S+K-1, C)
+    y = jnp.zeros((bsz, s, c), x.dtype)
+    for i in range(k):
+        y = y + xp[:, i:i + s, :] * w[i]
+    new_state = xp[:, -(k - 1):, :] if k > 1 else state
+    return jax.nn.silu(y + b), new_state
+
+
+def _scan_chunked(a: jnp.ndarray, bx: jnp.ndarray,
+                  h0: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Linear recurrence h_t = a_t * h_{t-1} + bx_t along axis 1.
+
+    a, bx: (B, S, ...) fp32; h0: (B, ...).  Returns (h_all (B,S,...), h_S).
+    Chunked: lax.scan over S/CHUNK chunks, associative_scan inside.
+    """
+    bsz, s = a.shape[:2]
+    n_chunks = max(1, s // CHUNK)
+    assert s % n_chunks == 0, f"seq {s} not divisible into chunks"
+    lc = s // n_chunks
+    a_c = a.reshape((bsz, n_chunks, lc) + a.shape[2:]).swapaxes(0, 1)
+    bx_c = bx.reshape((bsz, n_chunks, lc) + bx.shape[2:]).swapaxes(0, 1)
+
+    def combine(p, q):
+        (a1, b1), (a2, b2) = p, q
+        return a1 * a2, a2 * b1 + b2
+
+    def step(h, inputs):
+        ac, bc = inputs                     # (B, Lc, ...)
+        aa, bb = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        h_all = aa * h[:, None] + bb        # (B, Lc, ...)
+        return h_all[:, -1], h_all
+
+    h_last, h_chunks = jax.lax.scan(step, h0, (a_c, bx_c))
+    h_all = h_chunks.swapaxes(0, 1).reshape((bsz, s) + h0.shape[1:])
+    return h_all, h_last
+
+
+def mamba1_apply(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+                 conv_state: Optional[jnp.ndarray] = None,
+                 ssm_state: Optional[jnp.ndarray] = None):
+    """x: (B,S,D) -> (y, (conv_state, ssm_state)).
+
+    With S=1 this is the decode step; larger S covers train/prefill and
+    speculative multi-token verification.
+    """
+    s_cfg = cfg.ssm
+    d_in = s_cfg.expand * cfg.d_model
+    n = s_cfg.d_state
+    dt_rank = max(1, cfg.d_model // 16)
+    bsz, slen, _ = x.shape
+
+    xz = x @ params["in_proj"]
+    xs, z = xz[..., :d_in], xz[..., d_in:]
+    xs, new_conv = _causal_conv(xs, params["conv_w"], params["conv_b"],
+                                conv_state)
+    proj = xs @ params["x_proj"]
+    dt_in = proj[..., :dt_rank]
+    b_in = proj[..., dt_rank:dt_rank + n].astype(jnp.float32)     # (B,S,N)
+    c_in = proj[..., dt_rank + n:].astype(jnp.float32)            # (B,S,N)
+    dt = jax.nn.softplus(
+        (dt_in @ params["dt_proj"]).astype(jnp.float32)
+        + params["dt_bias"])                                      # (B,S,d_in)
+    a = -jnp.exp(params["A_log"])                                 # (d_in,N)
+    if ssm_state is None:
+        ssm_state = jnp.zeros((bsz, d_in, n), jnp.float32)
+    if cfg.use_pallas_kernels:
+        # VMEM-resident selective scan (repro/kernels/mamba_scan)
+        from repro.kernels.mamba_scan.ops import mamba_scan
+        y, h_last = mamba_scan(dt, xs.astype(jnp.float32), b_in, c_in, a,
+                               ssm_state)
+    else:
+        # discretize: a_bar = exp(dt*A) (B,S,d_in,N); b_bar*x = dt*B*x
+        a_bar = jnp.exp(dt[..., None] * a)
+        bx = (dt * xs.astype(jnp.float32))[..., None] * b_in[:, :, None, :]
+        h_all, h_last = _scan_chunked(a_bar, bx, ssm_state)
+        y = jnp.einsum("bsdn,bsn->bsd", h_all, c_in)
+    y = y + params["D"] * xs.astype(jnp.float32)
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ params["out_proj"]
+    return y, (new_conv, h_last)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_init(rng, cfg: ModelConfig) -> Params:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    nh = d_in // s.head_dim
+    g = s.n_groups
+    dt = _dt(cfg)
+    conv_dim = d_in + 2 * g * s.d_state
+    ks = jax.random.split(rng, 5)
+    # z / xBC / dt as SEPARATE projections: a fused (D, 2*d_in+2gN+nh)
+    # matrix sharded on the model axis forces cross-shard slices of its
+    # output (each logical stream straddles shard boundaries) — XLA
+    # reshards with collective-permutes that dominated zamba2's training
+    # roofline (EXPERIMENTS.md §Perf bonus pair).
+    return {
+        "z_proj": dense_init(ks[0], (d, d_in), dtype=dt),
+        "xbc_proj": dense_init(ks[3], (d, conv_dim), dtype=dt),
+        "dt_in_proj": dense_init(ks[4], (d, nh), dtype=dt),
+        "conv_w": dense_init(ks[1], (s.d_conv, conv_dim), dtype=dt),
+        "conv_b": jnp.zeros((conv_dim,), dtype=dt),
+        "dt_bias": jnp.zeros((nh,), dtype=jnp.float32),
+        "A_log": jnp.zeros((nh,), dtype=jnp.float32),
+        "D": jnp.ones((nh,), dtype=jnp.float32),
+        "norm": rmsnorm_init(d_in, dt),
+        "out_proj": dense_init(ks[2], (d_in, d), dtype=dt),
+    }
+
+
+def mamba2_apply(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+                 conv_state: Optional[jnp.ndarray] = None,
+                 ssm_state: Optional[jnp.ndarray] = None):
+    """SSD: within-chunk quadratic (masked, decay-weighted) attention +
+    inter-chunk scalar-decay state passing.
+
+    x: (B,S,D) -> (y, (conv_state, ssm_state (B,nh,hd,N)))
+    """
+    s_cfg = cfg.ssm
+    d_in = s_cfg.expand * cfg.d_model
+    hd, n, g = s_cfg.head_dim, s_cfg.d_state, s_cfg.n_groups
+    nh = d_in // hd
+    bsz, slen, _ = x.shape
+
+    z = x @ params["z_proj"]
+    xbc = x @ params["xbc_proj"]
+    dt_raw = x @ params["dt_in_proj"]
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                 conv_state)
+    xs = xbc[..., :d_in].reshape(bsz, slen, nh, hd)
+    b_in = xbc[..., d_in:d_in + g * n].reshape(
+        bsz, slen, g, n).astype(jnp.float32)
+    c_in = xbc[..., d_in + g * n:].reshape(
+        bsz, slen, g, n).astype(jnp.float32)
+    if g == 1:
+        b_in = jnp.broadcast_to(b_in, (bsz, slen, 1, n))
+        c_in = jnp.broadcast_to(c_in, (bsz, slen, 1, n))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])                     # (nh,)
+    log_decay = dt * a                                 # (B,S,nh) <= 0
+
+    if ssm_state is None:
+        ssm_state = jnp.zeros((bsz, nh, hd, n), jnp.float32)
+
+    if cfg.use_pallas_kernels and g == 1:
+        # SSD block-decomposition kernel (repro/kernels/ssd_scan)
+        from repro.kernels.ssd_scan.ops import ssd_scan
+        y_k, h_last = ssd_scan(
+            xs.astype(jnp.float32), b_in[:, :, 0], c_in[:, :, 0],
+            log_decay, dt, ssm_state,
+            chunk=min(CHUNK, slen))
+        y = y_k + params["D"][:, None] * xs.astype(jnp.float32)
+        y = y.reshape(bsz, slen, d_in).astype(x.dtype)
+        y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.rms_eps)
+        return y @ params["out_proj"], (new_conv, h_last)
+
+    n_chunks = max(1, slen // CHUNK)
+    assert slen % n_chunks == 0
+    lc = slen // n_chunks
+    hpg = nh // g  # heads per group
+
+    def reshape_c(t, extra):
+        return t.reshape((bsz, n_chunks, lc) + extra).swapaxes(0, 1)
+
+    xs_c = reshape_c(xs.astype(jnp.float32), (nh, hd))
+    b_c = reshape_c(b_in, (g, n))
+    c_c = reshape_c(c_in, (g, n))
+    ld_c = reshape_c(log_decay, (nh,))
+    dt_c = reshape_c(dt, (nh,))
+
+    def chunk_step(h, inp):
+        xc, bc, cc, ldc, dtc = inp        # (B,lc,...)
+        cum = jnp.cumsum(ldc, axis=1)     # (B,lc,nh) cumulative log decay
+        # intra-chunk: y_intra[i] = sum_{j<=i} decay(i,j) * (C_i.B_j) dt_j x_j
+        cgrp = cc[:, :, :, None, :]                         # (B,lc,g,1,N)
+        bgrp = bc[:, :, :, None, :]
+        cb = jnp.einsum("bigkn,bjgkn->bgij", cgrp, bgrp)    # (B,g,lc,lc)
+        cb = jnp.repeat(cb, hpg, axis=1)                    # (B,nh,lc,lc)
+        dmat = cum.transpose(0, 2, 1)[:, :, :, None] - \
+            cum.transpose(0, 2, 1)[:, :, None, :]           # (B,nh,i,j)
+        mask = jnp.tril(jnp.ones((lc, lc), bool))
+        dmat = jnp.where(mask, dmat, -jnp.inf)
+        w = cb * jnp.exp(dmat)                              # (B,nh,lc,lc)
+        xdt = xc * dtc[..., None]                           # (B,lc,nh,hd)
+        y_intra = jnp.einsum("bhij,bjhd->bihd", w, xdt)
+        # contribution of incoming state: y_state[i] = C_i . h * decay(0..i)
+        cfull = jnp.repeat(cc, hpg, axis=2)                 # (B,lc,nh,N)
+        y_state = jnp.einsum("bihn,bhdn->bihd", cfull, h) \
+            * jnp.exp(cum)[..., None]
+        # new state: h' = decay(total) * h + sum_j decay(j..end) B_j (dt_j x_j)
+        total = cum[:, -1]                                  # (B,nh)
+        rev = jnp.exp(total[:, None] - cum)                 # (B,lc,nh)
+        bfull = jnp.repeat(bc, hpg, axis=2)                 # (B,lc,nh,N)
+        h_new = h * jnp.exp(total)[..., None, None] + jnp.einsum(
+            "bjhd,bjhn,bjh->bhdn", xdt, bfull, rev)
+        return h_new, y_intra + y_state
+
+    h_last, y_chunks = jax.lax.scan(
+        chunk_step, ssm_state, (xs_c, b_c, c_c, ld_c, dt_c))
+    y = y_chunks.swapaxes(0, 1).reshape(bsz, slen, nh, hd)
+    y = y + params["D"][:, None] * xs.astype(jnp.float32)
+    y = y.reshape(bsz, slen, d_in).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.rms_eps)
+    return y @ params["out_proj"], (new_conv, h_last)

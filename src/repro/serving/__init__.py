@@ -1,0 +1,3 @@
+from repro.serving.engine import EngineConfig, GenerationResult, ServingEngine
+
+__all__ = ["ServingEngine", "EngineConfig", "GenerationResult"]

@@ -1,0 +1,456 @@
+"""Constrained serving engine — DOMINO integrated as a first-class feature.
+
+Modes (the rows of the paper's tables):
+  unconstrained          plain decoding
+  domino                 DOMINO masks, lookahead k (None = ∞, minimally
+                         invasive); opportunistic masking optional
+  naive                  greedy single-terminal masking (= DOMINO k=0)
+  online                 full-vocab online parser checking (llama.cpp/GCD
+                         cost profile, identical masks to domino k=∞)
+  template               GUIDANCE-style template programs (forced tokens)
+
+Speculation (§3.6): the grammar-state count model proposes up to ``s``
+tokens; ONE decode_step forward scores [pending || proposals]; the longest
+verified prefix commits.  Rollback is a cache-length rewind for full-
+attention/MLA archs; ring-buffer (SWA) and recurrent (SSM/hybrid) archs
+re-feed the accepted tokens from the pre-speculation cache (JAX arrays are
+immutable, so "snapshotting" the old cache is keeping a reference — free).
+
+Host/device overlap: masks for step t+1 are computed on host while the
+device executes step t (JAX async dispatch) — the TPU-side adaptation of
+the paper's "precomputation off the critical path".
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import OnlineParserDecoder, TemplateSession
+from repro.core.domino import DominoDecoder
+from repro.core.grammar import Grammar
+from repro.core.scanner import Scanner
+from repro.core.speculation import CountModel, Speculator
+from repro.core.trees import TreeCache
+from repro.models.model import Model
+from repro.tokenizer import BPETokenizer
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    mode: str = "domino"              # unconstrained|domino|naive|online|template
+    k: Optional[int] = None           # DOMINO lookahead (None = ∞)
+    opportunistic: bool = False
+    speculative: bool = False
+    spec_s: int = 8
+    spec_threshold: float = 0.5
+    temperature: float = 0.0          # 0 = greedy
+    max_tokens: int = 128
+    seed: int = 0
+    # token healing (§3.5): strip the last `heal` prompt tokens and force
+    # the stripped text as a generation prefix (bridge tokens across the
+    # prompt boundary become available)
+    heal: int = 0
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    text: str
+    token_ids: List[int]
+    n_forward_passes: int
+    n_tokens: int
+    n_interventions: int              # argmax rejected by the mask
+    n_spec_proposed: int
+    n_spec_accepted: int
+    mask_time_s: float
+    model_time_s: float
+    wall_time_s: float
+    finished: bool
+
+    @property
+    def tokens_per_forward(self) -> float:
+        return self.n_tokens / max(1, self.n_forward_passes)
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, tok: BPETokenizer,
+                 grammar: Optional[Grammar] = None,
+                 cfg: Optional[EngineConfig] = None,
+                 tree_cache: Optional[TreeCache] = None,
+                 count_model: Optional[CountModel] = None,
+                 max_len: int = 1024):
+        self.model = model
+        self.params = params
+        self.tok = tok
+        self.grammar = grammar
+        self.cfg = cfg or EngineConfig()
+        self.max_len = max_len
+        self.rng = np.random.default_rng(self.cfg.seed)
+        if grammar is not None and self.cfg.mode in ("domino", "naive",
+                                                     "online"):
+            self.tree_cache = tree_cache or TreeCache(
+                Scanner(grammar), list(tok.vocab))
+        else:
+            self.tree_cache = None
+        self.speculator = Speculator(
+            count_model, s=self.cfg.spec_s,
+            threshold=self.cfg.spec_threshold) if self.cfg.speculative else None
+        self._v = tok.vocab_size   # model logits may be vocab-padded
+        # jit'd steps (compiled once per (batch, s) shape)
+        self._prefill = jax.jit(self.model.prefill)
+        self._prefill_full = jax.jit(
+            lambda p, i, c: self.model.prefill(p, i, c, all_logits=True))
+        self._decode = jax.jit(self.model.decode_step)
+        # rollback safety (DESIGN.md §Arch-applicability)
+        blocks = self._all_block_kinds()
+        self._needs_refeed = any(
+            b in ("mamba1", "mamba2", "swa") for b in blocks)
+
+    def _all_block_kinds(self) -> List[str]:
+        head, reps, group, tail = self.model.cfg.layer_program
+        return list(head) + list(group) + list(tail)
+
+    # -- checker factory ---------------------------------------------------------
+
+    def _make_checker(self, heal_prefix: str = ""):
+        mode = self.cfg.mode
+        if mode == "unconstrained" or self.grammar is None:
+            return None
+        if mode == "domino" and heal_prefix:
+            from repro.core.healing import HealedDecoder
+            return HealedDecoder(self.grammar, list(self.tok.vocab),
+                                 self.tok.eos_id, heal_prefix,
+                                 k=self.cfg.k, tree_cache=self.tree_cache)
+        if mode == "domino":
+            return DominoDecoder(self.grammar, list(self.tok.vocab),
+                                 self.tok.eos_id, k=self.cfg.k,
+                                 tree_cache=self.tree_cache)
+        if mode == "naive":
+            return DominoDecoder(self.grammar, list(self.tok.vocab),
+                                 self.tok.eos_id, k=0,
+                                 tree_cache=self.tree_cache)
+        if mode == "online":
+            return OnlineParserDecoder(self.grammar, list(self.tok.vocab),
+                                       self.tok.eos_id,
+                                       tree_cache=self.tree_cache)
+        raise ValueError(mode)
+
+    # -- sampling -----------------------------------------------------------------
+
+    def _select(self, logits: np.ndarray, mask: Optional[np.ndarray]) -> int:
+        lg = logits.astype(np.float64)
+        if mask is not None:
+            lg = np.where(mask, lg, -1e30)
+        if self.cfg.temperature <= 0.0:
+            return int(lg.argmax())
+        p = np.exp((lg - lg.max()) / self.cfg.temperature)
+        p = p / p.sum()
+        return int(self.rng.choice(len(p), p=p))
+
+    # -- generation -----------------------------------------------------------------
+
+    def generate(self, prompt: str,
+                 extra_inputs: Optional[Dict[str, Any]] = None
+                 ) -> GenerationResult:
+        t_start = time.perf_counter()
+        self._mask_time = 0.0
+        cfg = self.cfg
+        prompt_ids = self.tok.encode(prompt) or [self.tok.bos_id]
+        heal_prefix = ""
+        if cfg.heal > 0 and len(prompt_ids) > cfg.heal:
+            from repro.core.healing import heal_prompt
+            prompt_ids, heal_prefix = heal_prompt(
+                prompt_ids, self.tok.vocab, n_strip=cfg.heal)
+        checker = self._make_checker(heal_prefix)
+        cache = self.model.init_cache(1, self.max_len)
+        inputs = {"tokens": jnp.asarray([prompt_ids], jnp.int32)}
+        if extra_inputs:
+            inputs.update(extra_inputs)
+
+        model_t = 0.0
+        mask_t = 0.0
+        n_fwd = 0
+        n_int = 0
+        n_prop = 0
+        n_acc = 0
+        out_ids: List[int] = []
+
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, inputs, cache)
+        logits = np.asarray(logits)[0, -1][:self._v]
+        model_t += time.perf_counter() - t0
+        n_fwd += 1
+
+        finished = False
+        budget = cfg.max_tokens
+        while budget > 0 and not finished:
+            # ---- try speculative fast path -------------------------------------
+            if (self.speculator is not None and checker is not None
+                    and hasattr(checker, "clone")):
+                tok0, intervened = self._pick(logits, checker)
+                n_int += intervened
+                if tok0 == self.tok.eos_id:
+                    finished = True
+                    checker.advance(tok0)
+                    break
+                self.speculator.observe(checker.state_key(), tok0)
+                checker.advance(tok0)
+                out_ids.append(tok0)
+                budget -= 1
+                proposals = self.speculator.propose(checker)
+                n_prop += len(proposals)
+                feed = [tok0] + proposals
+                # static verify width (spec_s + 1): TPU-friendly single
+                # compiled program; pad positions are rolled back below
+                n_pad = (1 + self.cfg.spec_s) - len(feed)
+                feed_p = feed + [self.tok.pad_id] * n_pad
+                cache_before = cache
+                t0 = time.perf_counter()
+                lg_multi, cache = self._decode(
+                    self.params, cache, jnp.asarray([feed_p], jnp.int32))
+                lg_multi = np.asarray(lg_multi)[0][:, :self._v]
+                model_t += time.perf_counter() - t0
+                n_fwd += 1
+                # verify proposals against (masked) argmax at each position
+                accepted = 0
+                ch = checker
+                for i, prop in enumerate(proposals):
+                    if budget <= 0:
+                        break
+                    # fast verification: if the raw argmax equals the
+                    # proposal, an O(token) opportunistic legality check
+                    # replaces the full tree-walk mask
+                    if cfg.temperature <= 0.0 \
+                            and int(lg_multi[i].argmax()) == prop \
+                            and ch.check_token(prop):
+                        tok_i = prop
+                    else:
+                        tok_i, intervened = self._pick(lg_multi[i], ch)
+                        n_int += intervened
+                    if tok_i != prop:
+                        break
+                    self.speculator.observe(ch.state_key(), tok_i)
+                    ch.advance(tok_i)
+                    accepted += 1
+                    if tok_i == self.tok.eos_id:
+                        finished = True
+                        break
+                    out_ids.append(tok_i)
+                    budget -= 1
+                n_acc += accepted
+                rejected = len(proposals) - accepted
+                if rejected > 0 or n_pad > 0:
+                    if self._needs_refeed:
+                        # recompute from the pre-speculation cache (exact
+                        # length: recurrent/ring state cannot host pads)
+                        t0 = time.perf_counter()
+                        lg_re, cache = self._decode(
+                            self.params, cache_before,
+                            jnp.asarray([feed[:1 + accepted]], jnp.int32))
+                        logits = np.asarray(lg_re)[0, -1][:self._v]
+                        model_t += time.perf_counter() - t0
+                        n_fwd += 1
+                    else:
+                        cache = self.model.rollback(cache,
+                                                    rejected + n_pad)
+                        logits = lg_multi[accepted]
+                else:
+                    logits = lg_multi[len(proposals)]
+                continue
+
+            # ---- plain path ------------------------------------------------------
+            tok, intervened = self._pick(logits, checker)
+            n_int += intervened
+            if checker is not None:
+                checker.advance(tok)
+            if tok == self.tok.eos_id:
+                finished = True
+                break
+            out_ids.append(tok)
+            budget -= 1
+            t0 = time.perf_counter()
+            lg, cache = self._decode(self.params, cache,
+                                     jnp.asarray([[tok]], jnp.int32))
+            logits = np.asarray(lg)[0, -1][:self._v]
+            model_t += time.perf_counter() - t0
+            n_fwd += 1
+
+        # mask timing bookkeeping
+        if checker is not None and hasattr(checker, "trees") \
+                and checker.trees is not None:
+            mask_t = getattr(self, "_mask_time", 0.0)
+
+        return GenerationResult(
+            text=self.tok.decode(out_ids),
+            token_ids=out_ids,
+            n_forward_passes=n_fwd,
+            n_tokens=len(out_ids),
+            n_interventions=n_int,
+            n_spec_proposed=n_prop,
+            n_spec_accepted=n_acc,
+            mask_time_s=self._mask_time,
+            model_time_s=model_t,
+            wall_time_s=time.perf_counter() - t_start,
+            finished=finished,
+        )
+
+    _mask_time = 0.0
+
+    def _pick(self, logits: np.ndarray, checker) -> Tuple[int, int]:
+        """Select the next token under the active constraint mode.
+        Returns (token, intervened?)."""
+        if checker is None:
+            return self._select(logits, None), 0
+        if self.cfg.opportunistic and self.cfg.temperature <= 0.0:
+            cand = int(logits.argmax())
+            t0 = time.perf_counter()
+            ok = checker.check_token(cand)
+            self._mask_time += time.perf_counter() - t0
+            if ok:
+                return cand, 0
+        t0 = time.perf_counter()
+        mask = checker.mask()
+        self._mask_time += time.perf_counter() - t0
+        if not mask.any():
+            # dead-end should be impossible (checker invariant) — force EOS
+            return self.tok.eos_id, 1
+        tok = self._select(logits, mask)
+        intervened = int(tok != int(logits.argmax()))
+        return tok, intervened
+
+    # -- batched serving -------------------------------------------------------------
+
+    def generate_batch(self, prompts: List[str]) -> List[GenerationResult]:
+        """Lockstep batched constrained decoding with per-request cache
+        lengths (ragged) and per-request checkers.
+
+        Prompts are prefilled one-by-one (B=1) into same-shaped caches,
+        which are then concatenated along batch; every decode step runs ONE
+        batched forward and applies each request's grammar mask to its row.
+        Finished rows keep feeding PAD with their length frozen via the
+        post-hoc result slice (their tokens are discarded).  Supported for
+        full-attention / MLA architectures (ring-buffer and recurrent
+        caches need per-row ring state; single-request path covers those).
+        """
+        kinds = self._all_block_kinds()
+        assert not any(k in ("swa", "mamba1", "mamba2") for k in kinds), \
+            "ragged batch serving supports full-attention/MLA archs"
+        t_start = time.perf_counter()
+        self._mask_time = 0.0
+        nb = len(prompts)
+        checkers = [self._make_checker() for _ in prompts]
+        model_t = 0.0
+        n_fwd = 0
+        # ONE batched prefill over right-padded prompts: per-row validity
+        # (k_pos < len_i) hides the pad region from decode, and per-row
+        # writes land exactly on those slots as generation proceeds.
+        ids = [self.tok.encode(p) or [self.tok.bos_id] for p in prompts]
+        lens = [len(x) for x in ids]
+        s_max = max(lens)
+        padded = [x + [self.tok.pad_id] * (s_max - len(x)) for x in ids]
+        cache = self.model.init_cache(nb, self.max_len)
+        t0 = time.perf_counter()
+        lg_all, cache = self._prefill_full(
+            self.params, {"tokens": jnp.asarray(padded, jnp.int32)}, cache)
+        model_t += time.perf_counter() - t0
+        n_fwd += 1
+        cache = dict(cache)
+        cache["len"] = jnp.asarray(lens, jnp.int32)   # ragged lengths
+        lg_all = np.asarray(lg_all)[:, :, :self._v]
+        logits = np.stack([lg_all[i, lens[i] - 1] for i in range(nb)])
+        out_ids: List[List[int]] = [[] for _ in prompts]
+        finished = [False] * nb
+        interventions = [0] * nb
+        for _ in range(self.cfg.max_tokens):
+            toks = []
+            for i in range(nb):
+                if finished[i]:
+                    toks.append(self.tok.pad_id)
+                    continue
+                tok_i, intervened = self._pick(logits[i], checkers[i])
+                interventions[i] += intervened
+                if checkers[i] is not None:
+                    checkers[i].advance(tok_i)
+                if tok_i == self.tok.eos_id:
+                    finished[i] = True
+                    toks.append(self.tok.pad_id)
+                else:
+                    out_ids[i].append(tok_i)
+                    toks.append(tok_i)
+            if all(finished):
+                break
+            t0 = time.perf_counter()
+            lg, cache = self._decode(
+                self.params, cache,
+                jnp.asarray([[t] for t in toks], jnp.int32))
+            logits = np.asarray(lg)[:, 0, :self._v]
+            model_t += time.perf_counter() - t0
+            n_fwd += 1
+        wall = time.perf_counter() - t_start
+        return [GenerationResult(
+            text=self.tok.decode(out_ids[i]), token_ids=out_ids[i],
+            n_forward_passes=n_fwd, n_tokens=len(out_ids[i]),
+            n_interventions=interventions[i], n_spec_proposed=0,
+            n_spec_accepted=0, mask_time_s=self._mask_time / nb,
+            model_time_s=model_t, wall_time_s=wall, finished=finished[i])
+            for i in range(nb)]
+
+    # -- template mode ------------------------------------------------------------
+
+    def generate_template(self, prompt: str, parts) -> GenerationResult:
+        """GUIDANCE-style template execution (baseline for Fig. 2/Table 2)."""
+        t_start = time.perf_counter()
+        session = TemplateSession(parts, list(self.tok.vocab),
+                                  self.tok.eos_id, self.tok.encode_greedy)
+        prompt_ids = self.tok.encode(prompt) or [self.tok.bos_id]
+        cache = self.model.init_cache(1, self.max_len)
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(
+            self.params, {"tokens": jnp.asarray([prompt_ids], jnp.int32)},
+            cache)
+        logits = np.asarray(logits)[0, -1][:self._v]
+        model_t = time.perf_counter() - t0
+        n_fwd = 1
+        out_ids: List[int] = []
+        budget = self.cfg.max_tokens
+        while budget > 0:
+            action, payload = session.next_action()
+            if action == "done":
+                break
+            if action == "force":
+                if not payload:
+                    continue
+                out_ids.extend(payload)
+                budget -= len(payload)
+                t0 = time.perf_counter()
+                lg, cache = self._decode(
+                    self.params, cache, jnp.asarray([payload], jnp.int32))
+                logits = np.asarray(lg)[0, -1][:self._v]
+                model_t += time.perf_counter() - t0
+                n_fwd += 1
+                continue
+            # gen under slot mask
+            tok = self._select(logits, payload)
+            session.feed(tok)
+            if tok == self.tok.eos_id:
+                continue  # slot ended; do not emit eos into output
+            out_ids.append(tok)
+            budget -= 1
+            t0 = time.perf_counter()
+            lg, cache = self._decode(self.params, cache,
+                                     jnp.asarray([[tok]], jnp.int32))
+            logits = np.asarray(lg)[0, -1][:self._v]
+            model_t += time.perf_counter() - t0
+            n_fwd += 1
+        return GenerationResult(
+            text=self.tok.decode(out_ids), token_ids=out_ids,
+            n_forward_passes=n_fwd, n_tokens=len(out_ids),
+            n_interventions=session.forced_tokens,
+            n_spec_proposed=0, n_spec_accepted=0,
+            mask_time_s=0.0, model_time_s=model_t,
+            wall_time_s=time.perf_counter() - t_start, finished=True)

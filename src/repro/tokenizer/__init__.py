@@ -1,0 +1,3 @@
+from repro.tokenizer.bpe import BPETokenizer, train_bpe
+
+__all__ = ["BPETokenizer", "train_bpe"]

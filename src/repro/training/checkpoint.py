@@ -1,0 +1,66 @@
+"""Checkpointing: params/opt-state as .npz with a flattened key index."""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_key_str(k) for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return f"[{k.idx}]"
+    return str(k)
+
+
+def save(path, params, opt_state=None, meta: Dict[str, Any] = None) -> None:
+    path = pathlib.Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    np.savez(path / "params.npz", **_flatten(params))
+    if opt_state is not None:
+        np.savez(path / "opt_state.npz", **_flatten(opt_state))
+    (path / "meta.json").write_text(json.dumps(meta or {}, default=str))
+
+
+def load(path, params_template, opt_template=None):
+    """Restore into the structure of the given templates."""
+    path = pathlib.Path(path)
+    data = np.load(path / "params.npz")
+
+    def fill(template, npz):
+        paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for p, leaf in paths:
+            key = "/".join(_key_str(k) for k in p)
+            arr = npz[key]
+            if arr.shape != leaf.shape:
+                # vocab-padding drift (embed/lm_head grow to a multiple of
+                # 256): zero-pad is exact — pad rows/cols are masked out
+                if all(a <= b for a, b in zip(arr.shape, leaf.shape)):
+                    pad = [(0, b - a) for a, b in zip(arr.shape, leaf.shape)]
+                    arr = np.pad(arr, pad)
+                else:
+                    raise ValueError(
+                        f"checkpoint shape mismatch at {key}: "
+                        f"{arr.shape} vs {leaf.shape}")
+            leaves.append(arr.astype(leaf.dtype))
+        return treedef.unflatten(leaves)
+
+    params = fill(params_template, data)
+    meta = json.loads((path / "meta.json").read_text())
+    if opt_template is not None and (path / "opt_state.npz").exists():
+        opt = fill(opt_template, np.load(path / "opt_state.npz"))
+        return params, opt, meta
+    return params, None, meta

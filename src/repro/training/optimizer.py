@@ -1,0 +1,100 @@
+"""AdamW + learning-rate schedules, hand-rolled (optax is not available).
+
+Schedules include WSD (warmup-stable-decay) — the training recipe of the
+assigned minicpm-2b [arXiv:2404.06395] — alongside cosine and constant.
+State is a pytree mirroring the params (m, v moments) + a step counter.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: str = "cosine"          # constant | cosine | wsd
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    # WSD: stable until decay_start, then linear decay to lr_min
+    decay_start_frac: float = 0.8
+    lr_min_frac: float = 0.1
+    # moment dtype: 'float32' (default) or 'bfloat16' — halves optimizer
+    # HBM (the binding constraint for 100B+ models on 16 GiB chips)
+    state_dtype: str = "float32"
+
+
+def schedule_fn(cfg: AdamWConfig) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+        if cfg.schedule == "constant":
+            main = 1.0
+        elif cfg.schedule == "cosine":
+            frac = jnp.clip((step - cfg.warmup_steps)
+                            / max(1, cfg.total_steps - cfg.warmup_steps),
+                            0.0, 1.0)
+            main = 0.5 * (1 + jnp.cos(jnp.pi * frac)) * (1 - cfg.lr_min_frac) \
+                + cfg.lr_min_frac
+        elif cfg.schedule == "wsd":
+            decay_start = cfg.decay_start_frac * cfg.total_steps
+            frac = jnp.clip((step - decay_start)
+                            / max(1.0, cfg.total_steps - decay_start),
+                            0.0, 1.0)
+            main = (1 - frac) * 1.0 + frac * cfg.lr_min_frac
+        else:
+            raise ValueError(cfg.schedule)
+        return cfg.lr * warm * main
+    return fn
+
+
+def init_state(params, cfg: "AdamWConfig" = None) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.state_dtype) if cfg is not None else jnp.float32
+    zeros = lambda: jax.tree.map(
+        lambda p: jnp.zeros_like(p, dtype=dt), params)
+    return {"m": zeros(), "v": zeros(), "step": jnp.zeros((), jnp.int32)}
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = schedule_fn(cfg)(step)
+
+    # global-norm clip
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mhat = m / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vhat = v / (1 - cfg.b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decay matrices only (norms/bias exempt)
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                m.astype(sdt), v.astype(sdt))
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, \
+        {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,57 @@
+"""Single-host training loop (the distributed version lives in
+repro/launch/train.py as a pjit program over the production mesh)."""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.training import optimizer as opt
+
+
+def make_train_step(model: Model, ocfg: opt.AdamWConfig):
+    def loss_fn(params, batch):
+        # labels provided separately (prompt masking) or derived from tokens
+        if "labels" in batch:
+            inputs = {k: v for k, v in batch.items() if k != "labels"}
+            inputs["tokens"] = batch["tokens"][:, :-1]
+            logits, aux = model.train_logits(params, inputs)
+            labels = batch["labels"]
+            if logits.shape[1] != labels.shape[1]:
+                logits = logits[:, -labels.shape[1]:]
+            from repro.models.model import cross_entropy
+            nll = cross_entropy(logits, labels)
+            return nll + aux, {"nll": nll, "aux": aux}
+        return model.loss(params, batch)
+
+    def step(params, state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        params, state, om = opt.apply_updates(params, grads, state, ocfg)
+        return params, state, {"loss": loss, **metrics, **om}
+
+    return jax.jit(step, donate_argnums=(0, 1))
+
+
+def train(model: Model, params, data_iter: Iterator[Dict], steps: int,
+          ocfg: Optional[opt.AdamWConfig] = None,
+          log_every: int = 20,
+          log_fn: Callable[[str], None] = print):
+    ocfg = ocfg or opt.AdamWConfig()
+    state = opt.init_state(params)
+    step_fn = make_train_step(model, ocfg)
+    history = []
+    t0 = time.perf_counter()
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in next(data_iter).items()}
+        params, state, metrics = step_fn(params, state, batch)
+        if i % log_every == 0 or i == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append({"step": i, **m})
+            log_fn(f"step {i:5d} loss={m['loss']:.4f} nll={m['nll']:.4f} "
+                   f"lr={m['lr']:.2e} gnorm={m['grad_norm']:.2f} "
+                   f"({time.perf_counter()-t0:.1f}s)")
+    return params, state, history

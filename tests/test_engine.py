@@ -1,0 +1,122 @@
+"""Serving engine integration: every constraint mode emits grammar-valid
+output; speculation reduces forward passes on schema-heavy grammars."""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import grammars
+from repro.core.baselines import Fixed, Gen
+from repro.core.domino import DominoDecoder
+from repro.models import build_model
+from repro.serving import EngineConfig, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def setup(request):
+    tok = request.getfixturevalue("small_tokenizer")
+    cfg = ModelConfig(arch_id="t", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128,
+                      vocab_size=tok.vocab_size, dtype="float32",
+                      max_seq_len=512)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return m, params, tok
+
+
+# make module-scope fixture able to use session fixture
+@pytest.fixture(scope="module")
+def small_tokenizer_mod(small_tokenizer):
+    return small_tokenizer
+
+
+@pytest.mark.parametrize("mode", ["domino", "naive", "online"])
+def test_output_is_grammar_valid(setup, json_grammar, mode):
+    m, params, tok = setup
+    eng = ServingEngine(m, params, tok, json_grammar,
+                        EngineConfig(mode=mode, max_tokens=24), max_len=512)
+    r = eng.generate("data: ")
+    d = DominoDecoder(json_grammar, list(tok.vocab), tok.eos_id)
+    for t in r.token_ids:
+        assert d.advance(t), tok.vocab[t]
+    if r.finished:
+        assert d.eos_legal()
+
+
+def test_unconstrained_runs(setup, json_grammar):
+    m, params, tok = setup
+    eng = ServingEngine(m, params, tok, None,
+                        EngineConfig(mode="unconstrained", max_tokens=10),
+                        max_len=512)
+    r = eng.generate("x")
+    assert r.n_tokens <= 10 and r.n_forward_passes >= 1
+
+
+def test_opportunistic_same_output(setup, json_grammar):
+    m, params, tok = setup
+    r1 = ServingEngine(m, params, tok, json_grammar,
+                       EngineConfig(mode="domino", max_tokens=16),
+                       max_len=512).generate("q: ")
+    r2 = ServingEngine(m, params, tok, json_grammar,
+                       EngineConfig(mode="domino", opportunistic=True,
+                                    max_tokens=16),
+                       max_len=512).generate("q: ")
+    assert r1.token_ids == r2.token_ids
+
+
+def test_speculation_saves_forward_passes(setup):
+    m, params, tok = setup
+    g = grammars.load("json_gsm8k")  # schema-heavy => predictable
+    base = ServingEngine(m, params, tok, g,
+                         EngineConfig(mode="domino", max_tokens=24),
+                         max_len=512)
+    r0 = base.generate("A: ")
+    spec_eng = ServingEngine(m, params, tok, g,
+                             EngineConfig(mode="domino", speculative=True,
+                                          spec_s=6, spec_threshold=0.4,
+                                          max_tokens=24), max_len=512)
+    spec_eng.generate("A: ")          # warm the count model
+    r1 = spec_eng.generate("A: ")
+    assert r1.token_ids == r0.token_ids, "speculation must not change output"
+    assert r1.n_forward_passes < r0.n_forward_passes
+    assert r1.n_spec_accepted > 0
+
+
+def test_speculation_with_refeed_arch(small_tokenizer):
+    """SWA archs use the snapshot+refeed rollback path."""
+    tok = small_tokenizer
+    cfg = ModelConfig(arch_id="t-swa", family="dense", n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                      vocab_size=tok.vocab_size, dtype="float32",
+                      group=("swa",), sliding_window=16, max_seq_len=512)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    g = grammars.load("json_gsm8k")
+    base = ServingEngine(m, params, tok, g,
+                         EngineConfig(mode="domino", max_tokens=20),
+                         max_len=512)
+    r0 = base.generate("A: ")
+    eng = ServingEngine(m, params, tok, g,
+                        EngineConfig(mode="domino", speculative=True,
+                                     spec_s=4, spec_threshold=0.4,
+                                     max_tokens=20), max_len=512)
+    assert eng._needs_refeed
+    eng.generate("A: ")
+    r1 = eng.generate("A: ")
+    assert r1.token_ids == r0.token_ids
+
+
+def test_template_mode(setup):
+    m, params, tok = setup
+    eng = ServingEngine(m, params, tok, None,
+                        EngineConfig(mode="unconstrained", max_tokens=40),
+                        max_len=512)
+    parts = [Fixed('{"id": '), Gen(r"[1-9][0-9]*", max_tokens=3),
+             Fixed(', "name": "'), Gen(r"[a-z]+", max_tokens=4),
+             Fixed('"}')]
+    r = eng.generate_template("obj: ", parts)
+    text = r.text
+    assert text.startswith('{"id": ')
+    assert text.endswith('"}')
+    assert r.n_interventions > 0  # forced tokens counted

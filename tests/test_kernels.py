@@ -1,0 +1,109 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.mamba_scan.ops import mamba_scan
+from repro.kernels.mamba_scan.ref import mamba_scan_ref
+from repro.kernels.masked_sample.ops import masked_argmax
+from repro.kernels.masked_sample.ref import masked_argmax_ref
+
+RNG = np.random.default_rng(42)
+
+
+@pytest.mark.parametrize("b,v,bv", [(1, 512, 128), (4, 8192, 2048),
+                                    (2, 1000, 2048), (3, 4096, 512)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_masked_argmax(b, v, bv, dtype):
+    logits = jnp.asarray(RNG.normal(size=(b, v)), dtype=dtype)
+    mask = jnp.asarray((RNG.random((b, v)) < 0.02).astype(np.int8))
+    mask = mask.at[:, v // 3].set(1)
+    i1, v1 = masked_argmax(logits, mask, block_v=bv)
+    i2, v2 = masked_argmax_ref(logits, mask)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-6)
+
+
+def test_masked_argmax_respects_mask():
+    logits = jnp.asarray(RNG.normal(size=(2, 256)).astype(np.float32)) + 10
+    mask = jnp.zeros((2, 256), jnp.int8).at[:, 5].set(1)
+    i, _ = masked_argmax(logits, mask, block_v=64)
+    assert list(np.asarray(i)) == [5, 5]
+
+
+@pytest.mark.parametrize("b,g,q,d,t,bt", [
+    (2, 2, 4, 64, 1024, 256), (1, 8, 1, 128, 2048, 512),
+    (2, 1, 8, 32, 100, 512), (1, 2, 2, 128, 4096, 1024)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_decode_attention(b, g, q, d, t, bt, dtype):
+    qq = jnp.asarray(RNG.normal(size=(b, g, q, d)), dtype=dtype)
+    k = jnp.asarray(RNG.normal(size=(b, t, g, d)), dtype=dtype)
+    v = jnp.asarray(RNG.normal(size=(b, t, g, d)), dtype=dtype)
+    ln = jnp.int32(max(1, t - 13))
+    o1 = decode_attention(qq, k, v, ln, block_t=bt)
+    o2 = decode_attention_ref(qq, k, v, ln)
+    atol = 3e-5 if dtype == np.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), atol=atol,
+                               rtol=1e-3)
+
+
+def test_decode_attention_length_masking():
+    b, g, q, d, t = 1, 1, 1, 16, 64
+    qq = jnp.ones((b, g, q, d), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, t, g, d)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(b, t, g, d)).astype(np.float32))
+    o_5 = decode_attention(qq, k, v, jnp.int32(5), block_t=16)
+    # zeroing the cache beyond length must not change the output
+    k2 = k.at[:, 5:].set(123.0)
+    v2 = v.at[:, 5:].set(-55.0)
+    o_5b = decode_attention(qq, k2, v2, jnp.int32(5), block_t=16)
+    np.testing.assert_allclose(np.asarray(o_5), np.asarray(o_5b), atol=1e-6)
+
+
+@pytest.mark.parametrize("b,s,d,n,bd,bs", [
+    (2, 64, 32, 8, 16, 16), (1, 128, 512, 16, 512, 128),
+    (2, 100, 48, 8, 48, 100), (1, 256, 64, 16, 32, 64)])
+def test_mamba_scan(b, s, d, n, bd, bs):
+    dt = jnp.asarray(np.abs(RNG.normal(size=(b, s, d))).astype(np.float32)
+                     * 0.1)
+    x = jnp.asarray(RNG.normal(size=(b, s, d)).astype(np.float32))
+    bm = jnp.asarray(RNG.normal(size=(b, s, n)).astype(np.float32))
+    cm = jnp.asarray(RNG.normal(size=(b, s, n)).astype(np.float32))
+    a = jnp.asarray(-np.abs(RNG.normal(size=(d, n))).astype(np.float32))
+    h0 = jnp.asarray(RNG.normal(size=(b, d, n)).astype(np.float32))
+    y1, h1 = mamba_scan(dt, x, bm, cm, a, h0, block_d=bd, block_s=bs)
+    y2, h2 = mamba_scan_ref(dt, x, bm, cm, a, h0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-4,
+                               rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 4), st.integers(2, 32))
+def test_mamba_scan_property(b, chunks, d):
+    """State continuity: scanning in one go == chunked with carried h."""
+    s = chunks * 16
+    n = 4
+    dt = jnp.asarray(np.abs(RNG.normal(size=(b, s, d))).astype(np.float32)
+                     * 0.1)
+    x = jnp.asarray(RNG.normal(size=(b, s, d)).astype(np.float32))
+    bm = jnp.asarray(RNG.normal(size=(b, s, n)).astype(np.float32))
+    cm = jnp.asarray(RNG.normal(size=(b, s, n)).astype(np.float32))
+    a = jnp.asarray(-np.abs(RNG.normal(size=(d, n))).astype(np.float32))
+    h = jnp.zeros((b, d, n), jnp.float32)
+    y_full, h_full = mamba_scan_ref(dt, x, bm, cm, a, h)
+    ys = []
+    for c in range(chunks):
+        sl = slice(c * 16, (c + 1) * 16)
+        y, h = mamba_scan(dt[:, sl], x[:, sl], bm[:, sl], cm[:, sl], a, h,
+                          block_d=d, block_s=16)
+        ys.append(np.asarray(y))
+    np.testing.assert_allclose(np.concatenate(ys, 1), np.asarray(y_full),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_full), atol=1e-4,
+                               rtol=1e-4)

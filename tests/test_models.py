@@ -1,0 +1,167 @@
+"""Model substrate: train/prefill/decode equivalence for every family,
+flash-attention correctness (fwd + custom_vjp bwd), SSM chunking."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig, SSMConfig
+from repro.models import build_model
+from repro.models.flash import blocked_attention, naive_attention
+
+BASE = dict(n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+            vocab_size=128, dtype="float32", max_seq_len=64)
+
+CONFIGS = {
+    "dense": ModelConfig(arch_id="t-dense", family="dense", **BASE),
+    "swa": ModelConfig(arch_id="t-swa", family="dense",
+                       group=("swa", "attn"), sliding_window=8, **BASE),
+    "moe": ModelConfig(arch_id="t-moe", family="moe", group=("moe",),
+                       moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=64,
+                                     n_shared_experts=1,
+                                     dense_residual_d_ff=32,
+                                     capacity_factor=2.0), **BASE),
+    "mamba1": ModelConfig(arch_id="t-m1", family="ssm", group=("mamba1",),
+                          ssm=SSMConfig(d_state=8, version=1), **BASE),
+    "hybrid": ModelConfig(arch_id="t-m2", family="hybrid",
+                          group=("mamba2", "mamba2", "shared_attn"),
+                          ssm=SSMConfig(d_state=8, version=2, head_dim=16),
+                          **BASE),
+    "mla-moe": ModelConfig(arch_id="t-mla", family="moe", group=("moe",),
+                           mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16,
+                                         qk_nope_head_dim=16,
+                                         qk_rope_head_dim=8, v_head_dim=16),
+                           moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=64,
+                                         n_shared_experts=1,
+                                         capacity_factor=2.0), **BASE),
+    "whisper": ModelConfig(arch_id="t-wh", family="audio", group=("xattn",),
+                           is_encoder_decoder=True, n_encoder_layers=2,
+                           encoder_seq_len=12, **BASE),
+    "vlm": ModelConfig(arch_id="t-vlm", family="vlm", group=("swa",),
+                       sliding_window=8, n_prefix_tokens=4, **BASE),
+}
+
+
+@pytest.mark.parametrize("family", list(CONFIGS))
+def test_decode_matches_train(family):
+    cfg = CONFIGS[family]
+    m = build_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = m.init(rng)
+    B, S = 2, 16
+    batch = m.example_batch(B, S, rng)
+    train_in = {k: (v[:, :-1] if k == "tokens" else v)
+                for k, v in batch.items()}
+    logits, aux = m.train_logits(params, train_in)
+    assert not np.any(np.isnan(np.asarray(logits, dtype=np.float32)))
+    assert float(aux) >= 0.0
+    toks = train_in["tokens"]
+    n_pre = 8
+    cache = m.init_cache(B, toks.shape[1] + 8)
+    pre = {k: (v[:, :n_pre] if k == "tokens" else v)
+           for k, v in train_in.items()}
+    lg, cache = m.prefill(params, pre, cache)
+    off = logits.shape[1] - toks.shape[1]
+    np.testing.assert_allclose(np.asarray(lg[:, -1]),
+                               np.asarray(logits[:, off + n_pre - 1]),
+                               atol=2e-2, rtol=1e-2)
+    # single-token decode
+    for i in range(n_pre, n_pre + 3):
+        lg, cache = m.decode_step(params, cache, toks[:, i:i + 1])
+        np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                                   np.asarray(logits[:, off + i]),
+                                   atol=2e-2, rtol=1e-2)
+    # multi-token speculative verification step
+    j0 = n_pre + 3
+    width = min(3, toks.shape[1] - j0)
+    if width > 1:
+        lgm, _ = m.decode_step(params, cache, toks[:, j0:j0 + width])
+        for j in range(width):
+            np.testing.assert_allclose(np.asarray(lgm[:, j]),
+                                       np.asarray(logits[:, off + j0 + j]),
+                                       atol=2e-2, rtol=1e-2)
+
+
+def test_loss_decreases_one_step():
+    cfg = CONFIGS["dense"]
+    m = build_model(cfg)
+    rng = jax.random.PRNGKey(1)
+    params = m.init(rng)
+    batch = {"tokens": jax.random.randint(rng, (4, 17), 0, 128, jnp.int32)}
+    loss0, _ = m.loss(params, batch)
+    g = jax.grad(lambda p: m.loss(p, batch)[0])(params)
+    params2 = jax.tree.map(lambda p, gg: p - 0.5 * gg, params, g)
+    loss1, _ = m.loss(params2, batch)
+    assert float(loss1) < float(loss0)
+
+
+@pytest.mark.parametrize("window", [None, 16])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_blocked_vs_naive_attention(window, dtype):
+    rng = np.random.default_rng(0)
+    b, s, g, qh, d = 2, 64, 2, 2, 16
+    q = jnp.asarray(rng.normal(size=(b, s, g, qh, d)), dtype=dtype)
+    k = jnp.asarray(rng.normal(size=(b, s, g, d)), dtype=dtype)
+    v = jnp.asarray(rng.normal(size=(b, s, g, d)), dtype=dtype)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    o1 = blocked_attention(q, k, v, pos, pos, window, None, 16, 32)
+    o2 = naive_attention(q, k, v, pos, pos, window)
+    atol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), atol=atol,
+                               rtol=1e-2)
+
+
+def test_flash_custom_vjp_grads():
+    rng = np.random.default_rng(3)
+    b, s, g, qh, d = 2, 64, 2, 2, 16
+    q = jnp.asarray(rng.normal(size=(b, s, g, qh, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, g, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s, g, d)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    for window in (None, 16):
+        f1 = lambda q, k, v: (blocked_attention(
+            q, k, v, pos, pos, window, None, 16, 32) ** 2).sum()
+        f2 = lambda q, k, v: (naive_attention(
+            q, k, v, pos, pos, window) ** 2).sum()
+        g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+        g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+        for a, bb in zip(g1, g2):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(bb),
+                                       atol=2e-4, rtol=1e-3)
+
+
+def test_mamba_chunking_invariance():
+    """The chunked scan must not depend on chunk size."""
+    import repro.models.ssm as ssm_mod
+    cfg = CONFIGS["mamba1"]
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (2, 33),
+                                          0, 128, jnp.int32)}
+    orig = ssm_mod.CHUNK
+    try:
+        ssm_mod.CHUNK = 8
+        l8, _ = m.train_logits(params, {"tokens": batch["tokens"][:, :-1]})
+        ssm_mod.CHUNK = 16
+        l16, _ = m.train_logits(params, {"tokens": batch["tokens"][:, :-1]})
+    finally:
+        ssm_mod.CHUNK = orig
+    np.testing.assert_allclose(np.asarray(l8), np.asarray(l16), atol=2e-4,
+                               rtol=1e-4)
+
+
+def test_rollback_full_attention():
+    cfg = CONFIGS["dense"]
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0, 128,
+                              jnp.int32)
+    cache = m.init_cache(1, 20)
+    lg, cache = m.prefill(params, {"tokens": toks[:, :6]}, cache)
+    # speculate 3, reject all, rollback, decode the true token
+    _, cache_spec = m.decode_step(params, cache, toks[:, 6:9])
+    cache_rb = m.rollback(cache_spec, 3)
+    lg1, _ = m.decode_step(params, cache_rb, toks[:, 6:7])
+    lg2, _ = m.decode_step(params, cache, toks[:, 6:7])
+    np.testing.assert_allclose(np.asarray(lg1), np.asarray(lg2), atol=1e-5)

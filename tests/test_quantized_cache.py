@@ -1,0 +1,45 @@
+"""int8 KV cache (§Perf pair 3 optimization): close to the bf16 path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import build_model
+
+BASE = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+            vocab_size=128, dtype="float32", max_seq_len=64)
+
+
+@pytest.mark.parametrize("group,window", [(("attn",), None), (("swa",), 8)])
+def test_int8_cache_close_to_native(group, window):
+    cfg = ModelConfig(arch_id="q", family="dense", group=group,
+                      sliding_window=window, **BASE)
+    cfg_q = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    m, mq = build_model(cfg), build_model(cfg_q)
+    params = m.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 14), 0, 128,
+                              jnp.int32)
+    lg_ref, _ = m.train_logits(params, {"tokens": toks})
+    c = mq.init_cache(2, 20)
+    assert c["group"]["b0"]["k"].dtype == jnp.int8
+    lg, c = mq.prefill(params, {"tokens": toks[:, :8]}, c)
+    np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                               np.asarray(lg_ref[:, 7]), atol=0.25, rtol=0.1)
+    for i in range(8, 12):
+        lg, c = mq.decode_step(params, c, toks[:, i:i + 1])
+        np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                                   np.asarray(lg_ref[:, i]), atol=0.25,
+                                   rtol=0.1)
+
+
+def test_int8_cache_memory_shape():
+    cfg = ModelConfig(arch_id="q", family="dense",
+                      kv_cache_dtype="int8", **BASE)
+    m = build_model(cfg)
+    spec = m.cache_spec(4, 32)
+    blk = spec["group"]["b0"]
+    assert blk["k"].dtype == jnp.int8
+    assert blk["k_scale"].shape == (2, 4, 32, 2)  # (reps, B, T, nkv)

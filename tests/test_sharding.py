@@ -1,0 +1,88 @@
+"""Sharding rules: specs match param trees, divisibility guard, cache specs."""
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch import sharding as shr
+from repro.models import build_model
+
+
+class _FakeMesh:
+    axis_names = ("data", "model")
+
+    class devices:
+        shape = (16, 16)
+
+
+def setup_module():
+    shr._AXIS_SIZES = {"data": 16, "model": 16}
+
+
+def test_param_specs_structure():
+    cfg = get_config("gemma3-27b")
+    m = build_model(cfg)
+    pshape = jax.eval_shape(m.init, jax.random.PRNGKey(0))
+    specs = shr.param_specs(cfg, pshape)
+    flat_p = jax.tree.leaves(pshape)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+    for leaf, spec in zip(flat_p, flat_s):
+        assert len(spec) <= len(leaf.shape)
+        for dim, ax in zip(leaf.shape, tuple(spec)):
+            if ax is not None:
+                assert dim % shr._axis_size(ax) == 0, (leaf.shape, spec)
+
+
+def test_stacked_group_not_sharded_on_reps():
+    cfg = get_config("yi-34b")
+    m = build_model(cfg)
+    pshape = jax.eval_shape(m.init, jax.random.PRNGKey(0))
+    specs = shr.param_specs(cfg, pshape)
+    wq_spec = specs["stack"]["group"]["b0"]["attn"]["wq"]
+    assert tuple(wq_spec)[0] is None  # reps axis replicated
+    assert "model" in tuple(wq_spec)
+
+
+def test_expert_specs():
+    cfg = get_config("deepseek-v3-671b")
+    m = build_model(cfg)
+    pshape = jax.eval_shape(m.init, jax.random.PRNGKey(0))
+    specs = shr.param_specs(cfg, pshape)
+    wg = specs["stack"]["group"]["b0"]["moe"]["w_gate"]
+    assert tuple(wg)[1] == "model"  # experts axis (after reps)
+
+
+def test_divisibility_guard():
+    # 56 heads * 128 = 7168 columns divides 16; a 6-head dim must not shard
+    spec = shr._guard(P("model"), (6,))
+    assert tuple(spec) == (None,)
+    spec = shr._guard(P(None, "model"), (10, 32))
+    assert tuple(spec) == (None, "model")
+
+
+def test_cache_specs_kv_heads_vs_seq():
+    cfg = get_config("yi-34b")           # kv=8, not divisible by 16
+    m = build_model(cfg)
+    cshape = m.cache_spec(128, 1024)
+    specs = shr.cache_specs(cfg, cshape, 128, ("data",))
+    kspec = specs["group"]["b0"]["k"]
+    # stacked: (None, batch, T:'model', heads None, None)
+    assert tuple(kspec)[2] == "model" and tuple(kspec)[3] is None
+
+    cfg2 = get_config("stablelm-1.6b")   # kv=32, divisible
+    m2 = build_model(cfg2)
+    cshape2 = m2.cache_spec(128, 1024)
+    specs2 = shr.cache_specs(cfg2, cshape2, 128, ("data",))
+    kspec2 = specs2["group"]["b0"]["k"]
+    assert tuple(kspec2)[3] == "model"
+
+
+def test_batch1_replicated():
+    cfg = get_config("falcon-mamba-7b")
+    m = build_model(cfg)
+    cshape = m.cache_spec(1, 64)
+    specs = shr.cache_specs(cfg, cshape, 1, ("data",))
+    sspec = specs["group"]["b0"]["ssm"]
+    assert tuple(sspec)[1] is None       # batch=1 cannot shard over data=16
+    assert tuple(sspec)[2] == "model"    # d_inner sharded

@@ -1,0 +1,100 @@
+"""Speculation (count model, proposals) + token healing + retokenization."""
+import numpy as np
+
+from repro.core import grammars
+from repro.core.domino import DominoDecoder
+from repro.core.healing import HealedDecoder, heal_prompt
+from repro.core.retokenize import greedy_tokenize, retokenize
+from repro.core.speculation import (CountModel, Speculator, verify_greedy,
+                                    verify_stochastic)
+
+
+def test_count_model():
+    cm = CountModel()
+    assert cm.predict(("a", 1)) is None
+    for _ in range(3):
+        cm.observe(("a", 1), 7)
+    cm.observe(("a", 1), 8)
+    tok, p = cm.predict(("a", 1))
+    assert tok == 7 and abs(p - 0.75) < 1e-9
+
+
+def test_proposals_are_grammar_legal(small_tokenizer):
+    tok = small_tokenizer
+    g = grammars.load("json_gsm8k")
+    d = DominoDecoder(g, tok.vocab, eos_id=tok.eos_id)
+    spec = Speculator(s=6, threshold=0.4)
+    # teach the model a canonical schema prefix
+    text = b'{"thoughts": [{"step": "a", "calculation": "b", "result": 1}], "answer": 1}'
+    ids = greedy_tokenize(text, tok.vocab)
+    dd = d.clone()
+    for t in ids:
+        spec.observe(dd.state_key(), t)
+        assert dd.advance(t)
+    # propose from the start: the chain must be legal
+    props = spec.propose(d)
+    assert len(props) > 0
+    chk = d.clone()
+    for t in props:
+        assert chk.advance(t), tok.vocab[t]
+
+
+def test_verify_rules():
+    assert verify_greedy([1, 2, 3], [1, 2, 4]) == 2
+    assert verify_greedy([1], [1]) == 1
+    assert verify_greedy([5], [1]) == 0
+    # stochastic: always accept when p_model >= q
+    n = verify_stochastic([1, 2], [0.5, 0.5], [0.9, 0.9], [0.5, 0.5])
+    assert n == 2
+    n = verify_stochastic([1, 2], [0.9, 0.9], [0.1, 0.9], [0.5, 0.1])
+    assert n == 0
+
+
+def test_heal_prompt(small_tokenizer):
+    tok = small_tokenizer
+    ids = tok.encode('Answer: {"a"')
+    kept, stripped = heal_prompt(ids, tok.vocab, n_strip=2)
+    assert tok.decode(kept) + stripped == 'Answer: {"a"'
+
+
+def test_healed_decoder_forces_prefix(small_tokenizer):
+    tok = small_tokenizer
+    g = grammars.load("json")
+    d = HealedDecoder(g, tok.vocab, eos_id=tok.eos_id, prefix_text='{"a')
+    # continuations of '{"a' accepted: full output '{"ab": 1}' is in L(G)
+    good = greedy_tokenize(b'{"ab": 1}', tok.vocab)
+    for t in good:
+        assert d.mask()[t], tok.vocab[t]
+        assert d.advance(t), tok.vocab[t]
+    assert d.eos_legal()
+    # deviating from the prefix is rejected
+    d2 = HealedDecoder(g, tok.vocab, eos_id=tok.eos_id, prefix_text='{"a')
+    bad = greedy_tokenize(b'{"x', tok.vocab)
+    ok = True
+    for t in bad:
+        if not d2.advance(t):
+            ok = False
+            break
+    assert not ok, "prefix not enforced"
+    # bridge over the boundary: a token spanning prefix-end + new text
+    d3 = HealedDecoder(g, tok.vocab, eos_id=tok.eos_id, prefix_text='{')
+    bridge = greedy_tokenize(b'{"k": 2}', tok.vocab)
+    for t in bridge:
+        assert d3.advance(t), tok.vocab[t]
+    assert d3.eos_legal()
+
+
+def test_retokenize_matches_model_preference(small_tokenizer):
+    tok = small_tokenizer
+    target = b'{"name": 1}'
+    # a fake model that strongly prefers the longest available token
+    def model_logits(ids):
+        lg = np.zeros(tok.vocab_size, np.float32)
+        for i, v in enumerate(tok.vocab):
+            if v:
+                lg[i] = len(v)
+        return lg
+    ids = retokenize(model_logits, [], target, tok.vocab)
+    assert tok.decode_bytes(ids) == target
+    greedy = greedy_tokenize(target, tok.vocab)
+    assert ids == greedy  # longest-match preference == greedy tokenization

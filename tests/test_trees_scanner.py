@@ -1,0 +1,96 @@
+"""Scanner traversal + subterminal tree construction (Alg. 2)."""
+import pytest
+
+from repro.core import grammars
+from repro.core.grammar import parse_grammar
+from repro.core.scanner import FRESH, Scanner
+from repro.core.trees import TreeCache, VocabTrie
+
+
+@pytest.fixture(scope="module")
+def arith():
+    return parse_grammar(r'''
+start: e
+e: INT | "(" e ")" | e "+" e
+INT: /[1-9][0-9]*|0+/
+WS: /[ ]+/
+%ignore WS
+''')
+
+
+def _tid(g, name):
+    return {t.name: i for i, t in enumerate(g.terminals)}[name]
+
+
+def test_traverse_simple(arith):
+    sc = Scanner(arith)
+    INT = _tid(arith, "INT")
+    PLUS = _tid(arith, "'+'")
+    branches = sc.traverse_token(FRESH, b"12")
+    kinds = {(ems, pos is FRESH) for ems, pos in branches}
+    # "12": still-open INT, or INT completed exactly at the boundary
+    assert ((), False) in kinds
+    assert ((INT,), True) in kinds
+
+
+def test_traverse_bridge(arith):
+    sc = Scanner(arith)
+    INT = _tid(arith, "INT")
+    PLUS = _tid(arith, "'+'")
+    branches = sc.traverse_token(FRESH, b"1+2")
+    ems_set = {ems for ems, pos in branches}
+    assert (INT, PLUS) in ems_set
+    # with trailing emit-at-end branch:
+    assert (INT, PLUS, INT) in ems_set
+
+
+def test_traverse_ignore_collapsed(arith):
+    sc = Scanner(arith)
+    INT = _tid(arith, "INT")
+    branches = sc.traverse_token(FRESH, b"1 ")   # int then whitespace
+    ems_set = {ems for ems, pos in branches}
+    assert (INT,) in ems_set                      # WS not in emissions
+    assert all(_tid(arith, "WS") not in ems for ems in ems_set)
+
+
+def test_traverse_dead_token(arith):
+    sc = Scanner(arith)
+    assert sc.traverse_token(FRESH, b"a") == []
+
+
+def test_tree_covers_whole_vocab(arith):
+    vocab = [bytes([i]) for i in range(256)] + [b"12", b"(1", b"+ 1", None]
+    tc = TreeCache(Scanner(arith), vocab)
+    tree = tc.tree(FRESH)
+    covered = set()
+
+    def rec(node):
+        covered.update(node.tokens_fresh)
+        for toks in node.tokens_partial.values():
+            covered.update(toks)
+        for c in node.children.values():
+            rec(c)
+    rec(tree.root)
+    # every byte that can start any terminal must appear somewhere
+    legal_first = {i for i in range(256)
+                   if tc.scanner.start_moves(i) is not None}
+    assert legal_first <= covered
+    assert 256 in covered and 257 in covered and 258 in covered
+
+
+def test_precompute_closure(arith, small_tokenizer):
+    tc = TreeCache(Scanner(arith), list(small_tokenizer.vocab))
+    stats = tc.precompute()
+    assert stats["positions"] >= 2
+    # after precompute, no new trees are built on demand for reachable pos
+    n = len(tc.trees)
+    for pos in list(tc.trees):
+        tc.tree(pos)
+    assert len(tc.trees) == n
+
+
+def test_vocab_trie():
+    trie = VocabTrie.build([b"ab", b"a", b"abc", None, b""])
+    assert trie.children[ord("a")].token_ids == [1]
+    assert trie.children[ord("a")].children[ord("b")].token_ids == [0]
+    assert trie.count_nodes() == 4
