@@ -21,6 +21,8 @@ def main() -> None:
     ap.add_argument("--max-tokens", type=int, default=64)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--prompts", type=int, default=2)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="continuous-batching decode slots")
     ap.add_argument("--checkpoint", default=None)
     args = ap.parse_args()
 
@@ -66,13 +68,12 @@ def main() -> None:
                "Results as JSON: ",
                "Config: ",
                "Data record: "][:args.prompts]
-    kinds = engine._all_block_kinds()
-    batchable = (not args.speculative and len(prompts) > 1 and not any(
-        k in ("swa", "mamba1", "mamba2") for k in kinds))
-    if batchable:
-        print(f"[batched serving: {len(prompts)} ragged requests, "
-              "one lockstep decode]")
-        results = engine.generate_batch(prompts)
+    if len(prompts) > 1:
+        # continuous batching covers every arch (SSM/SWA rows are admitted
+        # by exact-length prefill; speculation refeeds per row)
+        print(f"[continuous batching: {len(prompts)} requests, "
+              f"{min(len(prompts), args.slots)} slots]")
+        results = engine.generate_batch(prompts, max_batch=args.slots)
     else:
         results = [engine.generate(p) for p in prompts]
     for p, r in zip(prompts, results):

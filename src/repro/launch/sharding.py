@@ -182,8 +182,8 @@ def cache_specs(cfg: ModelConfig, cache_shape, batch: int,
         shape = s.shape[1:] if stacked else s.shape
         if name == "len":
             spec = P()
-        elif name == "pos":                      # (W,) slot->position map
-            spec = P(*([None] * len(shape)))
+        elif name == "pos":                      # (B, W) slot->position map
+            spec = P(b_ax, None)
         elif name in ("k", "v", "xk", "xv"):     # (B, T, nkv, dh)
             nkv = shape[2]
             t = shape[1]

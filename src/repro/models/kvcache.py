@@ -2,7 +2,8 @@
 
 Cache layout (all static shapes — TPU/XLA friendly):
  - full attention: k/v (B, T_max, n_kv, d_head); validity = pos < len
- - sliding window: ring buffers (B, W, n_kv, d_head) + slot->position map
+ - sliding window: ring buffers (B, W, n_kv, d_head) + per-row
+   slot->position map (B, W)
  - MLA: the compressed latent (B, T_max, r_kv) + rope key (B, T_max, 1, dr)
  - SSM: conv state (B, K-1, C) + recurrent state (fp32)
  - cross-attention (whisper): encoder k/v, written once at prefill
@@ -10,7 +11,8 @@ Cache layout (all static shapes — TPU/XLA friendly):
 The cache for a scanned group of layers is the same pytree with a leading
 ``reps`` axis, so it can be fed through ``jax.lax.scan`` together with the
 stacked layer params.  ``len`` is a single int32 scalar for the whole model
-(batch-synchronous decoding).
+(batch-synchronous decoding) or an (B,) int32 vector for ragged /
+continuous-batching serving.
 """
 from __future__ import annotations
 
@@ -46,7 +48,9 @@ def block_cache_spec(cfg: ModelConfig, kind: str, batch: int, max_len: int,
     if kind == "swa":
         w = min(cfg.sliding_window or max_len, max_len)
         spec = _kv(w)
-        spec["pos"] = jax.ShapeDtypeStruct((w,), jnp.int32)
+        # per-row slot->position map: rows of a continuous batch sit at
+        # different sequence positions, so each carries its own ring state
+        spec["pos"] = jax.ShapeDtypeStruct((batch, w), jnp.int32)
         return spec
     if kind == "mla":
         m = cfg.mla

@@ -160,10 +160,11 @@ class Model:
         return kvcache.cache_spec(self.cfg, batch, max_len)
 
     def prefill(self, params: Params, inputs: Dict[str, jnp.ndarray],
-                cache, all_logits: bool = False) -> Tuple[jnp.ndarray, Any]:
-        """Run the prompt, fill the cache.  Returns (logits, cache) —
-        last position only unless ``all_logits`` (ragged batched serving
-        reads each row's logits at its own prompt length)."""
+                cache) -> Tuple[jnp.ndarray, Any]:
+        """Run the prompt, fill the cache.  Returns (last-position logits,
+        cache).  Batched serving prefills each request at its exact length
+        (B=1) and scatters the row into its slot, so only the last
+        position's logits are ever needed."""
         x, enc_out = self._assemble(params, inputs)
         b, s, _ = x.shape
         pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
@@ -171,7 +172,7 @@ class Model:
                   max_len=0, enc_out=enc_out)
         x, _, new_cache = stack_apply(params["stack"], self.cfg, x, ctx, cache)
         new_cache["len"] = cache["len"] + s
-        return self._head(params, x if all_logits else x[:, -1:]), new_cache
+        return self._head(params, x[:, -1:]), new_cache
 
     def decode_step(self, params: Params, cache,
                     tokens: jnp.ndarray) -> Tuple[jnp.ndarray, Any]:

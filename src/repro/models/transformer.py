@@ -148,9 +148,7 @@ def _self_attention(p: Params, cfg: ModelConfig, xn: jnp.ndarray, ctx: Ctx,
             k_old, v_old = _read_kv(cache, xn.dtype)
             k_all = jnp.concatenate([k_old, k_new], axis=1)
             v_all = jnp.concatenate([v_old, v_new], axis=1)
-            k_pos = jnp.concatenate([
-                jnp.broadcast_to(cache["pos"], (b, cache["pos"].shape[0])),
-                ctx.q_pos], axis=1)
+            k_pos = jnp.concatenate([cache["pos"], ctx.q_pos], axis=1)
             k_valid = k_pos >= 0
             out = attention_any(qg, k_all, v_all, ctx.q_pos, k_pos,
                                 window, k_valid)
@@ -201,22 +199,21 @@ def _write_kv(cache: Params, cfg: ModelConfig, k: jnp.ndarray,
             out["v_scale"] = jax.lax.dynamic_update_slice(
                 cache["v_scale"], v_sc, (0, ln, 0))
         return out
+    # Ring write, per-row: rows of a ragged batch sit at different sequence
+    # positions, so write offsets and the slot->position map are (B, ...).
     w = cache["k"].shape[1]
-    if s >= w:
-        sl = slice(-w, None)
-        idx = (ln + s - w + jnp.arange(w, dtype=jnp.int32)) % w
-        pos_val = ln + s - w + jnp.arange(w, dtype=jnp.int32)
-    else:
-        sl = slice(None)
-        idx = (ln + jnp.arange(s, dtype=jnp.int32)) % w
-        pos_val = ln + jnp.arange(s, dtype=jnp.int32)
+    n = min(s, w)                      # only the last w tokens can survive
+    ln_b = ln[:, None] if ctx.ragged else jnp.full((b, 1), ln, jnp.int32)
+    pos_val = ln_b + (s - n) + jnp.arange(n, dtype=jnp.int32)[None, :]
+    idx = pos_val % w                  # (B, n) per-row ring slots
+    rows = jnp.arange(b, dtype=jnp.int32)[:, None]
     out = dict(cache)
-    out["k"] = cache["k"].at[:, idx].set(k[:, sl])
-    out["v"] = cache["v"].at[:, idx].set(v[:, sl])
+    out["k"] = cache["k"].at[rows, idx].set(k[:, -n:])
+    out["v"] = cache["v"].at[rows, idx].set(v[:, -n:])
     if quant:
-        out["k_scale"] = cache["k_scale"].at[:, idx].set(k_sc[:, sl])
-        out["v_scale"] = cache["v_scale"].at[:, idx].set(v_sc[:, sl])
-    out["pos"] = cache["pos"].at[idx].set(pos_val)
+        out["k_scale"] = cache["k_scale"].at[rows, idx].set(k_sc[:, -n:])
+        out["v_scale"] = cache["v_scale"].at[rows, idx].set(v_sc[:, -n:])
+    out["pos"] = cache["pos"].at[rows, idx].set(pos_val)
     return out
 
 

@@ -1,3 +1,6 @@
-from repro.serving.engine import EngineConfig, GenerationResult, ServingEngine
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.scheduler import ContinuousBatchingScheduler
+from repro.serving.session import GenerationResult, Session
 
-__all__ = ["ServingEngine", "EngineConfig", "GenerationResult"]
+__all__ = ["ServingEngine", "EngineConfig", "GenerationResult", "Session",
+           "ContinuousBatchingScheduler"]

@@ -16,16 +16,15 @@ attention/MLA archs; ring-buffer (SWA) and recurrent (SSM/hybrid) archs
 re-feed the accepted tokens from the pre-speculation cache (JAX arrays are
 immutable, so "snapshotting" the old cache is keeping a reference — free).
 
-Host/device overlap: masks for step t+1 are computed on host while the
-device executes step t (JAX async dispatch) — the TPU-side adaptation of
-the paper's "precomputation off the critical path".
+This module keeps the single-request fast path and the template baseline.
+Batched serving lives in ``serving/scheduler.py`` (continuous batching
+with slot reuse); ``generate_batch`` delegates to it.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +37,7 @@ from repro.core.scanner import Scanner
 from repro.core.speculation import CountModel, Speculator
 from repro.core.trees import TreeCache
 from repro.models.model import Model
+from repro.serving.session import GenerationResult
 from repro.tokenizer import BPETokenizer
 
 
@@ -56,25 +56,6 @@ class EngineConfig:
     # the stripped text as a generation prefix (bridge tokens across the
     # prompt boundary become available)
     heal: int = 0
-
-
-@dataclasses.dataclass
-class GenerationResult:
-    text: str
-    token_ids: List[int]
-    n_forward_passes: int
-    n_tokens: int
-    n_interventions: int              # argmax rejected by the mask
-    n_spec_proposed: int
-    n_spec_accepted: int
-    mask_time_s: float
-    model_time_s: float
-    wall_time_s: float
-    finished: bool
-
-    @property
-    def tokens_per_forward(self) -> float:
-        return self.n_tokens / max(1, self.n_forward_passes)
 
 
 class ServingEngine:
@@ -103,8 +84,6 @@ class ServingEngine:
         self._v = tok.vocab_size   # model logits may be vocab-padded
         # jit'd steps (compiled once per (batch, s) shape)
         self._prefill = jax.jit(self.model.prefill)
-        self._prefill_full = jax.jit(
-            lambda p, i, c: self.model.prefill(p, i, c, all_logits=True))
         self._decode = jax.jit(self.model.decode_step)
         # rollback safety (DESIGN.md §Arch-applicability)
         blocks = self._all_block_kinds()
@@ -115,7 +94,37 @@ class ServingEngine:
         head, reps, group, tail = self.model.cfg.layer_program
         return list(head) + list(group) + list(tail)
 
+    def precompute(self) -> Dict[str, float]:
+        """Offline warm path: build every reachable subterminal tree now
+        (paper Algorithm 2) so serving never constructs trees on the
+        critical path.  The TreeCache is shared across all sessions."""
+        if self.tree_cache is None:
+            return {"positions": 0.0, "seconds": 0.0}
+        return self.tree_cache.precompute()
+
     # -- checker factory ---------------------------------------------------------
+
+    def _prep_request(self, prompt: str):
+        """Shared request preamble: encode, apply token healing (§3.5),
+        build the checker.  Both ``generate`` and the scheduler's
+        ``submit`` go through here so their outputs stay token-for-token
+        identical."""
+        prompt_ids = self.tok.encode(prompt) or [self.tok.bos_id]
+        heal_prefix = ""
+        if self.cfg.heal > 0 and len(prompt_ids) > self.cfg.heal:
+            from repro.core.healing import heal_prompt
+            prompt_ids, heal_prefix = heal_prompt(
+                prompt_ids, self.tok.vocab, n_strip=self.cfg.heal)
+        return prompt_ids, self._make_checker(heal_prefix)
+
+    def make_session(self, rid: int, prompt: str, extra_inputs=None):
+        """Create a scheduler :class:`~repro.serving.session.Session` for
+        ``prompt`` (used by ``ContinuousBatchingScheduler.submit``)."""
+        from repro.serving.session import Session
+        prompt_ids, checker = self._prep_request(prompt)
+        return Session(rid=rid, prompt=prompt, prompt_ids=prompt_ids,
+                       checker=checker, budget=self.cfg.max_tokens,
+                       extra_inputs=extra_inputs)
 
     def _make_checker(self, heal_prefix: str = ""):
         mode = self.cfg.mode
@@ -152,21 +161,44 @@ class ServingEngine:
         p = p / p.sum()
         return int(self.rng.choice(len(p), p=p))
 
+    def _pick(self, logits: np.ndarray, checker
+              ) -> Tuple[Optional[int], int, float]:
+        """Select the next token under the active constraint mode.
+
+        Returns (token, intervened?, mask_seconds).  ``token`` is None when
+        the checker reached a dead end (no legal token, EOS included) —
+        callers surface this as ``GenerationResult.dead_end`` instead of
+        silently emitting grammar-violating output.
+        """
+        if checker is None:
+            return self._select(logits, None), 0, 0.0
+        mask_t = 0.0
+        if self.cfg.opportunistic and self.cfg.temperature <= 0.0:
+            cand = int(logits.argmax())
+            t0 = time.perf_counter()
+            ok = checker.check_token(cand)
+            mask_t += time.perf_counter() - t0
+            if ok:
+                return cand, 0, mask_t
+        t0 = time.perf_counter()
+        mask = checker.mask()
+        mask_t += time.perf_counter() - t0
+        if not mask.any():
+            # the checker invariant makes this unreachable for sound
+            # grammars; if it happens, report it rather than force EOS
+            return None, 0, mask_t
+        tok = self._select(logits, mask)
+        intervened = int(tok != int(logits.argmax()))
+        return tok, intervened, mask_t
+
     # -- generation -----------------------------------------------------------------
 
     def generate(self, prompt: str,
                  extra_inputs: Optional[Dict[str, Any]] = None
                  ) -> GenerationResult:
         t_start = time.perf_counter()
-        self._mask_time = 0.0
         cfg = self.cfg
-        prompt_ids = self.tok.encode(prompt) or [self.tok.bos_id]
-        heal_prefix = ""
-        if cfg.heal > 0 and len(prompt_ids) > cfg.heal:
-            from repro.core.healing import heal_prompt
-            prompt_ids, heal_prefix = heal_prompt(
-                prompt_ids, self.tok.vocab, n_strip=cfg.heal)
-        checker = self._make_checker(heal_prefix)
+        prompt_ids, checker = self._prep_request(prompt)
         cache = self.model.init_cache(1, self.max_len)
         inputs = {"tokens": jnp.asarray([prompt_ids], jnp.int32)}
         if extra_inputs:
@@ -187,12 +219,17 @@ class ServingEngine:
         n_fwd += 1
 
         finished = False
+        dead_end = False
         budget = cfg.max_tokens
-        while budget > 0 and not finished:
+        while budget > 0 and not finished and not dead_end:
             # ---- try speculative fast path -------------------------------------
             if (self.speculator is not None and checker is not None
                     and hasattr(checker, "clone")):
-                tok0, intervened = self._pick(logits, checker)
+                tok0, intervened, dt = self._pick(logits, checker)
+                mask_t += dt
+                if tok0 is None:
+                    dead_end = True
+                    break
                 n_int += intervened
                 if tok0 == self.tok.eos_id:
                     finished = True
@@ -225,12 +262,20 @@ class ServingEngine:
                     # fast verification: if the raw argmax equals the
                     # proposal, an O(token) opportunistic legality check
                     # replaces the full tree-walk mask
+                    tok_i = None
                     if cfg.temperature <= 0.0 \
-                            and int(lg_multi[i].argmax()) == prop \
-                            and ch.check_token(prop):
-                        tok_i = prop
-                    else:
-                        tok_i, intervened = self._pick(lg_multi[i], ch)
+                            and int(lg_multi[i].argmax()) == prop:
+                        t0 = time.perf_counter()
+                        ok = ch.check_token(prop)
+                        mask_t += time.perf_counter() - t0
+                        if ok:
+                            tok_i = prop
+                    if tok_i is None:
+                        tok_i, intervened, dt = self._pick(lg_multi[i], ch)
+                        mask_t += dt
+                        if tok_i is None:
+                            dead_end = True
+                            break
                         n_int += intervened
                     if tok_i != prop:
                         break
@@ -264,7 +309,11 @@ class ServingEngine:
                 continue
 
             # ---- plain path ------------------------------------------------------
-            tok, intervened = self._pick(logits, checker)
+            tok, intervened, dt = self._pick(logits, checker)
+            mask_t += dt
+            if tok is None:
+                dead_end = True
+                break
             n_int += intervened
             if checker is not None:
                 checker.advance(tok)
@@ -280,11 +329,6 @@ class ServingEngine:
             model_t += time.perf_counter() - t0
             n_fwd += 1
 
-        # mask timing bookkeeping
-        if checker is not None and hasattr(checker, "trees") \
-                and checker.trees is not None:
-            mask_t = getattr(self, "_mask_time", 0.0)
-
         return GenerationResult(
             text=self.tok.decode(out_ids),
             token_ids=out_ids,
@@ -293,112 +337,33 @@ class ServingEngine:
             n_interventions=n_int,
             n_spec_proposed=n_prop,
             n_spec_accepted=n_acc,
-            mask_time_s=self._mask_time,
+            mask_time_s=mask_t,
             model_time_s=model_t,
             wall_time_s=time.perf_counter() - t_start,
             finished=finished,
+            dead_end=dead_end,
         )
-
-    _mask_time = 0.0
-
-    def _pick(self, logits: np.ndarray, checker) -> Tuple[int, int]:
-        """Select the next token under the active constraint mode.
-        Returns (token, intervened?)."""
-        if checker is None:
-            return self._select(logits, None), 0
-        if self.cfg.opportunistic and self.cfg.temperature <= 0.0:
-            cand = int(logits.argmax())
-            t0 = time.perf_counter()
-            ok = checker.check_token(cand)
-            self._mask_time += time.perf_counter() - t0
-            if ok:
-                return cand, 0
-        t0 = time.perf_counter()
-        mask = checker.mask()
-        self._mask_time += time.perf_counter() - t0
-        if not mask.any():
-            # dead-end should be impossible (checker invariant) — force EOS
-            return self.tok.eos_id, 1
-        tok = self._select(logits, mask)
-        intervened = int(tok != int(logits.argmax()))
-        return tok, intervened
 
     # -- batched serving -------------------------------------------------------------
 
-    def generate_batch(self, prompts: List[str]) -> List[GenerationResult]:
-        """Lockstep batched constrained decoding with per-request cache
-        lengths (ragged) and per-request checkers.
+    def generate_batch(self, prompts: List[str],
+                       max_batch: Optional[int] = None
+                       ) -> List[GenerationResult]:
+        """Serve ``prompts`` through the continuous-batching scheduler.
 
-        Prompts are prefilled one-by-one (B=1) into same-shaped caches,
-        which are then concatenated along batch; every decode step runs ONE
-        batched forward and applies each request's grammar mask to its row.
-        Finished rows keep feeding PAD with their length frozen via the
-        post-hoc result slice (their tokens are discarded).  Supported for
-        full-attention / MLA architectures (ring-buffer and recurrent
-        caches need per-row ring state; single-request path covers those).
+        ``max_batch`` caps the decode batch (slots); extra prompts wait in
+        the admission queue and reuse slots as earlier requests finish.
+        All architectures are supported: recurrent/ring rows are admitted
+        by exact-length prefill and speculation uses per-row refeed.
+        Call :meth:`precompute` first to keep tree construction off the
+        serving critical path.
         """
-        kinds = self._all_block_kinds()
-        assert not any(k in ("swa", "mamba1", "mamba2") for k in kinds), \
-            "ragged batch serving supports full-attention/MLA archs"
-        t_start = time.perf_counter()
-        self._mask_time = 0.0
-        nb = len(prompts)
-        checkers = [self._make_checker() for _ in prompts]
-        model_t = 0.0
-        n_fwd = 0
-        # ONE batched prefill over right-padded prompts: per-row validity
-        # (k_pos < len_i) hides the pad region from decode, and per-row
-        # writes land exactly on those slots as generation proceeds.
-        ids = [self.tok.encode(p) or [self.tok.bos_id] for p in prompts]
-        lens = [len(x) for x in ids]
-        s_max = max(lens)
-        padded = [x + [self.tok.pad_id] * (s_max - len(x)) for x in ids]
-        cache = self.model.init_cache(nb, self.max_len)
-        t0 = time.perf_counter()
-        lg_all, cache = self._prefill_full(
-            self.params, {"tokens": jnp.asarray(padded, jnp.int32)}, cache)
-        model_t += time.perf_counter() - t0
-        n_fwd += 1
-        cache = dict(cache)
-        cache["len"] = jnp.asarray(lens, jnp.int32)   # ragged lengths
-        lg_all = np.asarray(lg_all)[:, :, :self._v]
-        logits = np.stack([lg_all[i, lens[i] - 1] for i in range(nb)])
-        out_ids: List[List[int]] = [[] for _ in prompts]
-        finished = [False] * nb
-        interventions = [0] * nb
-        for _ in range(self.cfg.max_tokens):
-            toks = []
-            for i in range(nb):
-                if finished[i]:
-                    toks.append(self.tok.pad_id)
-                    continue
-                tok_i, intervened = self._pick(logits[i], checkers[i])
-                interventions[i] += intervened
-                if checkers[i] is not None:
-                    checkers[i].advance(tok_i)
-                if tok_i == self.tok.eos_id:
-                    finished[i] = True
-                    toks.append(self.tok.pad_id)
-                else:
-                    out_ids[i].append(tok_i)
-                    toks.append(tok_i)
-            if all(finished):
-                break
-            t0 = time.perf_counter()
-            lg, cache = self._decode(
-                self.params, cache,
-                jnp.asarray([[t] for t in toks], jnp.int32))
-            logits = np.asarray(lg)[:, 0, :self._v]
-            model_t += time.perf_counter() - t0
-            n_fwd += 1
-        wall = time.perf_counter() - t_start
-        return [GenerationResult(
-            text=self.tok.decode(out_ids[i]), token_ids=out_ids[i],
-            n_forward_passes=n_fwd, n_tokens=len(out_ids[i]),
-            n_interventions=interventions[i], n_spec_proposed=0,
-            n_spec_accepted=0, mask_time_s=self._mask_time / nb,
-            model_time_s=model_t, wall_time_s=wall, finished=finished[i])
-            for i in range(nb)]
+        from repro.serving.scheduler import ContinuousBatchingScheduler
+        cap = min(len(prompts), max_batch) if max_batch else len(prompts)
+        sched = ContinuousBatchingScheduler(self, capacity=cap)
+        sessions = [sched.submit(p) for p in prompts]
+        sched.run()
+        return [s.result for s in sessions]
 
     # -- template mode ------------------------------------------------------------
 

@@ -1,0 +1,416 @@
+"""Continuous-batching constrained scheduler.
+
+Replaces the old lockstep ``generate_batch``: a fixed-capacity decode batch
+whose rows (KV "slots") are admitted and evicted independently.  Finished
+requests free their slot immediately and the next waiting request is
+prefilled into it, so the batch stays full under load instead of draining
+to the slowest request.
+
+Design points (ISSUE 1 tentpole):
+ - admission prefills each request at its EXACT prompt length (B=1, no
+   padding) and scatters the resulting row cache into the slot — this is
+   what makes recurrent (SSM) and ring-buffer (SWA) rows correct: their
+   state never sees pad tokens;
+ - every decode step runs ONE batched forward over all slots; grammar
+   masks are applied device-side through the fused
+   ``kernels/masked_sample`` Pallas op (host only ships the (B, V) bit
+   mask and reads back (B,) token ids);
+ - speculative decoding (paper §3.6) runs per-row: one (B, 1+s) decode
+   verifies every row's proposal chain; rows on full-attention/MLA archs
+   roll their per-row cache length back, rows on SSM/SWA archs re-feed
+   their accepted tokens from the pre-speculation cache (B=1, exact
+   length) and are scattered back into the slot;
+ - all sessions share the engine's TreeCache (and count model); call
+   ``warm()`` to run the offline ``precompute()`` pass before serving.
+
+Token selection is identical to the single-request engine path at
+temperature 0 (greedy masked argmax, ties to the lowest index), so
+per-request outputs match ``ServingEngine.generate`` token-for-token.
+"""
+from __future__ import annotations
+
+import collections
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.masked_sample.ops import masked_argmax
+from repro.serving.session import GenerationResult, Session
+
+
+# -- per-slot cache surgery ----------------------------------------------------
+#
+# Cache pytree layout (models/kvcache.py): {"len", "head": [block...],
+# "group": {"b#": stacked blocks (leading reps axis)}, "tail": [block...]}.
+# head/tail leaves carry batch on axis 0, group leaves on axis 1 (after the
+# reps axis); "len" is (B,) in a ragged batch cache and scalar in a B=1 row
+# cache.
+
+
+def _scatter_row(dst, src, slot):
+    """Write a B=1 row cache ``src`` into row ``slot`` of batch cache."""
+    out = dict(dst)
+    out["len"] = dst["len"].at[slot].set(src["len"])
+    out["head"] = [jax.tree.map(lambda d, s: d.at[slot].set(s[0]), dc, sc)
+                   for dc, sc in zip(dst["head"], src["head"])]
+    out["tail"] = [jax.tree.map(lambda d, s: d.at[slot].set(s[0]), dc, sc)
+                   for dc, sc in zip(dst["tail"], src["tail"])]
+    out["group"] = {
+        k: jax.tree.map(lambda d, s: d.at[:, slot].set(s[:, 0]),
+                        dst["group"][k], src["group"][k])
+        for k in dst["group"]}
+    return out
+
+
+def _gather_row(src, slot):
+    """Extract row ``slot`` of a batch cache as a B=1 row cache."""
+    def row0(a):
+        return jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=0)
+
+    def row1(a):
+        return jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1)
+
+    return {
+        "len": jax.lax.dynamic_index_in_dim(src["len"], slot,
+                                            keepdims=False),
+        "head": [jax.tree.map(row0, c) for c in src["head"]],
+        "tail": [jax.tree.map(row0, c) for c in src["tail"]],
+        "group": {k: jax.tree.map(row1, v) for k, v in src["group"].items()},
+    }
+
+
+# admission: the old batch cache is dropped on assignment, so donate it —
+# without donation every admission copies the whole B x max_len cache
+_scatter_row_donate = jax.jit(_scatter_row, donate_argnums=(0,))
+# refeed fixup: the pre-speculation snapshot may share untouched leaves
+# (e.g. cross-attention xk/xv) with the current cache, so no donation
+_scatter_row_jit = jax.jit(_scatter_row)
+_gather_row_jit = jax.jit(_gather_row)
+
+
+class ContinuousBatchingScheduler:
+    """Admits requests into a fixed-capacity constrained decode batch."""
+
+    def __init__(self, engine, capacity: int = 4):
+        self.eng = engine
+        self.capacity = max(1, capacity)
+        self.waiting: "collections.deque[Session]" = collections.deque()
+        self.slots: List[Optional[Session]] = [None] * self.capacity
+        self.cache = engine.model.init_cache(self.capacity, engine.max_len)
+        self.cache["len"] = jnp.zeros((self.capacity,), jnp.int32)  # ragged
+        vpad = engine.model.padded_vocab
+        self._logits = jnp.zeros((self.capacity, vpad), jnp.float32)
+        self._raw_argmax = jax.jit(lambda lg: jnp.argmax(lg, axis=-1))
+        self.n_fwd = 0                 # global forward count (all slots)
+        self._next_rid = 0
+
+    # -- public API -------------------------------------------------------------
+
+    def warm(self) -> Dict[str, float]:
+        """Run the offline tree precomputation (paper Algorithm 2) so mask
+        construction never lands on the serving critical path."""
+        return self.eng.precompute()
+
+    def submit(self, prompt: str, extra_inputs=None) -> Session:
+        sess = self.eng.make_session(self._next_rid, prompt, extra_inputs)
+        self._next_rid += 1
+        self.waiting.append(sess)
+        return sess
+
+    def run(self) -> List[GenerationResult]:
+        """Drive all submitted sessions to completion; results in rid
+        order."""
+        done: List[Session] = []
+        while self.waiting or any(s is not None for s in self.slots):
+            done.extend(self.step())
+        done.sort(key=lambda s: s.rid)
+        return [s.result for s in done]
+
+    def step(self) -> List[Session]:
+        """One scheduler tick: admit -> select -> decode.  Returns sessions
+        that finished during this tick."""
+        self._finished_now: List[Session] = []
+        self._admit()
+        if any(s is not None for s in self.slots):
+            if self.eng.speculator is not None:
+                self._spec_step()
+            else:
+                self._plain_step()
+        return self._finished_now
+
+    # -- admission / eviction ---------------------------------------------------
+
+    def _admit(self) -> None:
+        eng = self.eng
+        while self.waiting and None in self.slots:
+            slot = self.slots.index(None)
+            sess = self.waiting.popleft()
+            row_cache = eng.model.init_cache(1, eng.max_len)
+            inputs = {"tokens": jnp.asarray([sess.prompt_ids], jnp.int32)}
+            if sess.extra_inputs:
+                inputs.update(sess.extra_inputs)
+            t0 = time.perf_counter()
+            logits, row_cache = eng._prefill(eng.params, inputs, row_cache)
+            self.cache = _scatter_row_donate(self.cache, row_cache, slot)
+            self._logits = self._logits.at[slot].set(
+                logits[0, -1].astype(jnp.float32))
+            sess.model_time += time.perf_counter() - t0
+            sess.n_fwd += 1
+            self.n_fwd += 1
+            sess.slot = slot
+            sess.t_admit = time.perf_counter()
+            self.slots[slot] = sess
+
+    def _finish(self, sess: Session) -> None:
+        sess.finish(self.eng.tok.decode)
+        if sess.slot >= 0:
+            self.slots[sess.slot] = None
+        self._finished_now.append(sess)
+
+    # -- token selection --------------------------------------------------------
+
+    def _choose(self) -> Dict[int, int]:
+        """Pick one token per occupied slot (device-side masked argmax at
+        temperature 0).  Finishes dead-ended sessions; updates intervention
+        stats.  Returns {slot: token}."""
+        eng = self.eng
+        v = eng._v
+        raw = np.asarray(self._raw_argmax(self._logits))
+        masks = np.zeros((self.capacity, v), dtype=np.int8)
+        masks[:, 0] = 1                      # empty slots: harmless sentinel
+        row_mask_bool: Dict[int, Optional[np.ndarray]] = {}
+        for slot, sess in enumerate(self.slots):
+            if sess is None:
+                continue
+            ch = sess.checker
+            if ch is None:
+                masks[slot, :] = 1
+                row_mask_bool[slot] = None
+                continue
+            if eng.cfg.opportunistic and eng.cfg.temperature <= 0.0:
+                t0 = time.perf_counter()
+                ok = ch.check_token(int(raw[slot]))
+                sess.mask_time += time.perf_counter() - t0
+                if ok:
+                    masks[slot, :] = 0
+                    masks[slot, raw[slot]] = 1
+                    row_mask_bool[slot] = None
+                    continue
+            t0 = time.perf_counter()
+            m = ch.mask()
+            sess.mask_time += time.perf_counter() - t0
+            if not m.any():
+                sess.dead_end = True
+                self._finish(sess)
+                continue
+            masks[slot, :] = 0
+            masks[slot, m] = 1
+            row_mask_bool[slot] = m
+        occupied = [i for i, s in enumerate(self.slots) if s is not None]
+        if not occupied:
+            return {}
+        if eng.cfg.temperature <= 0.0:
+            idx, _ = masked_argmax(self._logits[:, :v], jnp.asarray(masks))
+            toks = np.asarray(idx)
+        else:
+            lg_host = np.asarray(self._logits)[:, :v]
+            toks = np.zeros(self.capacity, np.int64)
+            for slot in occupied:
+                m = row_mask_bool.get(slot)
+                toks[slot] = eng._select(lg_host[slot], m)
+        out: Dict[int, int] = {}
+        for slot in occupied:
+            sess = self.slots[slot]
+            tok = int(toks[slot])
+            sess.n_int += int(tok != int(raw[slot]))
+            out[slot] = tok
+        return out
+
+    # -- plain decode tick ------------------------------------------------------
+
+    def _commit_first(self, chosen: Dict[int, int]) -> Dict[int, int]:
+        """Advance checkers / budgets for the chosen tokens; finish rows
+        that hit EOS or exhaust their budget.  Returns {slot: token} for
+        rows that still need a forward."""
+        eng = self.eng
+        live: Dict[int, int] = {}
+        for slot, tok in chosen.items():
+            sess = self.slots[slot]
+            ch = sess.checker
+            if tok == eng.tok.eos_id:
+                if ch is not None:
+                    ch.advance(tok)
+                sess.finished_eos = True
+                self._finish(sess)
+                continue
+            if ch is not None and eng.speculator is not None \
+                    and hasattr(ch, "clone"):
+                eng.speculator.observe(ch.state_key(), tok)
+            if ch is not None:
+                ch.advance(tok)
+            sess.out_ids.append(tok)
+            sess.budget -= 1
+            if sess.budget <= 0:
+                self._finish(sess)
+                continue
+            live[slot] = tok
+        return live
+
+    def _run_decode(self, feed: jnp.ndarray):
+        """One batched forward; attributes time/count to resident rows.
+        Blocks until the device finishes so per-request model_time_s
+        measures execution, not dispatch (the host would otherwise pay the
+        wait inside the next tick's argmax readback, attributed to
+        nothing)."""
+        eng = self.eng
+        t0 = time.perf_counter()
+        lg, self.cache = eng._decode(eng.params, self.cache, feed)
+        lg.block_until_ready()
+        dt = time.perf_counter() - t0
+        self.n_fwd += 1
+        for sess in self.slots:
+            if sess is not None:
+                sess.n_fwd += 1
+                sess.model_time += dt
+        return lg
+
+    def _plain_step(self) -> None:
+        eng = self.eng
+        live = self._commit_first(self._choose())
+        if not any(s is not None for s in self.slots):
+            return
+        feed = [[eng.tok.pad_id]] * self.capacity
+        for slot, tok in live.items():
+            feed[slot] = [tok]
+        lg = self._run_decode(jnp.asarray(feed, jnp.int32))
+        self._logits = lg[:, -1].astype(jnp.float32)
+
+    # -- speculative decode tick (§3.6) -----------------------------------------
+
+    def _spec_step(self) -> None:
+        eng = self.eng
+        pad = eng.tok.pad_id
+        live = self._commit_first(self._choose())
+        if not any(s is not None for s in self.slots):
+            return
+        proposals: Dict[int, List[int]] = {}
+        for slot, tok in live.items():
+            ch = self.slots[slot].checker
+            props = []
+            if ch is not None and hasattr(ch, "clone"):
+                props = eng.speculator.propose(ch)
+            self.slots[slot].n_prop += len(props)
+            proposals[slot] = props
+        if all(len(p) == 0 for p in proposals.values()):
+            # nothing to verify anywhere: plain-width forward, no rollback
+            feed = [[pad]] * self.capacity
+            for slot, tok in live.items():
+                feed[slot] = [tok]
+            lg = self._run_decode(jnp.asarray(feed, jnp.int32))
+            self._logits = lg[:, -1].astype(jnp.float32)
+            return
+        width = 1 + eng.cfg.spec_s
+        feed = [[pad] * width for _ in range(self.capacity)]
+        for slot, tok in live.items():
+            row = [tok] + proposals[slot]
+            feed[slot][:len(row)] = row
+        snapshot = self.cache          # JAX arrays are immutable: free
+        snap_len = snapshot["len"]
+        lg_dev = self._run_decode(jnp.asarray(feed, jnp.int32))
+        lg_host = np.asarray(lg_dev)[:, :, :eng._v]
+        # rows not in `live` consumed the full pad width; "accepting" it
+        # keeps their (garbage, to-be-overwritten) length bookkeeping
+        # consistent with the decoded cache
+        accepted_vec = np.full(self.capacity, eng.cfg.spec_s, np.int32)
+        for slot, props in proposals.items():
+            accepted_vec[slot] = self._verify_row(slot, props, lg_host[slot])
+        if eng._needs_refeed:
+            self._fixup_refeed(snapshot, live, proposals, accepted_vec,
+                               lg_dev)
+        else:
+            # per-row rollback: KV entries beyond `len` are masked by
+            # validity, so rewinding the per-row length is the whole rollback
+            cache = dict(self.cache)
+            cache["len"] = snap_len + 1 + jnp.asarray(accepted_vec)
+            self.cache = cache
+            self._logits = lg_dev[
+                jnp.arange(self.capacity), jnp.asarray(accepted_vec)
+            ].astype(jnp.float32)
+
+    def _verify_row(self, slot: int, props: List[int],
+                    lg_row: np.ndarray) -> int:
+        """Greedy per-row verification, identical to the single-request
+        path: accept the longest prefix where the proposal matches the
+        (masked) selection at each position."""
+        eng = self.eng
+        sess = self.slots[slot]
+        ch = sess.checker
+        accepted = 0
+        for i, prop in enumerate(props):
+            if sess.budget <= 0:
+                break
+            tok_i = None
+            if eng.cfg.temperature <= 0.0 \
+                    and int(lg_row[i].argmax()) == prop:
+                t0 = time.perf_counter()
+                ok = ch.check_token(prop)
+                sess.mask_time += time.perf_counter() - t0
+                if ok:
+                    tok_i = prop
+            if tok_i is None:
+                tok_i, intervened, mask_dt = eng._pick(lg_row[i], ch)
+                sess.mask_time += mask_dt
+                if tok_i is None:          # dead end mid-verification
+                    sess.dead_end = True
+                    break
+                sess.n_int += intervened
+            if tok_i != prop:
+                break
+            eng.speculator.observe(ch.state_key(), tok_i)
+            ch.advance(tok_i)
+            accepted += 1
+            if tok_i == eng.tok.eos_id:
+                sess.finished_eos = True
+                break
+            sess.out_ids.append(tok_i)
+            sess.budget -= 1
+        sess.n_acc += accepted
+        if sess.finished_eos or sess.dead_end or sess.budget <= 0:
+            self._finish(sess)
+        return accepted
+
+    def _fixup_refeed(self, snapshot, live, proposals, accepted_vec,
+                      lg_dev) -> None:
+        """SSM/SWA rows cannot rewind state: re-feed each partially-accepted
+        row's committed tokens from the pre-speculation cache (B=1, exact
+        length) and scatter the result back into its slot."""
+        eng = self.eng
+        s_max = eng.cfg.spec_s
+        for slot, tok in live.items():
+            sess = self.slots[slot]
+            if sess is None:
+                # finished during verification: the slot is free and its
+                # row state is overwritten at the next admission
+                continue
+            a = int(accepted_vec[slot])
+            props = proposals[slot]
+            if a == len(props) and len(props) == s_max:
+                # full accept, no pads: the batch-decoded row state is exact
+                self._logits = self._logits.at[slot].set(
+                    lg_dev[slot, -1].astype(jnp.float32))
+                continue
+            committed = [tok] + props[:a]
+            row = _gather_row_jit(snapshot, slot)
+            t0 = time.perf_counter()
+            lg_re, row = eng._decode(
+                eng.params, row, jnp.asarray([committed], jnp.int32))
+            self.cache = _scatter_row_jit(self.cache, row, slot)
+            self._logits = self._logits.at[slot].set(
+                lg_re[0, -1].astype(jnp.float32))
+            dt = time.perf_counter() - t0
+            self.n_fwd += 1
+            sess.n_fwd += 1
+            sess.model_time += dt

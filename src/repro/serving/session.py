@@ -1,0 +1,86 @@
+"""Per-request serving state.
+
+A :class:`Session` is everything the continuous-batching scheduler needs to
+know about one request: its grammar checker, its budget, the KV slot it
+occupies while resident, and per-request statistics (mask time, forward
+passes, speculation counters, wall-clock).  Sessions are created by
+``ServingEngine.make_session`` / ``Scheduler.submit`` and carry their
+:class:`GenerationResult` once finished.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    text: str
+    token_ids: List[int]
+    n_forward_passes: int
+    n_tokens: int
+    n_interventions: int              # argmax rejected by the mask
+    n_spec_proposed: int
+    n_spec_accepted: int
+    mask_time_s: float
+    model_time_s: float
+    wall_time_s: float
+    finished: bool
+    # the checker reached a state with NO legal token (including EOS).
+    # Output up to this point is a valid *prefix* but cannot be completed;
+    # forcing EOS here would silently emit grammar-violating output.
+    dead_end: bool = False
+
+    @property
+    def tokens_per_forward(self) -> float:
+        return self.n_tokens / max(1, self.n_forward_passes)
+
+
+@dataclasses.dataclass
+class Session:
+    """One request's lifecycle through the scheduler.
+
+    States: waiting (slot < 0) -> active (slot >= 0) -> finished
+    (result is not None, slot freed).
+    """
+    rid: int
+    prompt: str
+    prompt_ids: List[int]
+    checker: Any                      # DominoDecoder-like, or None
+    budget: int
+    extra_inputs: Optional[Dict[str, Any]] = None
+    slot: int = -1
+    out_ids: List[int] = dataclasses.field(default_factory=list)
+    # per-request statistics
+    n_fwd: int = 0                    # forwards while this request resident
+    n_int: int = 0
+    n_prop: int = 0
+    n_acc: int = 0
+    mask_time: float = 0.0            # this request's checker time only
+    model_time: float = 0.0
+    # lifecycle (done == result is not None)
+    finished_eos: bool = False
+    dead_end: bool = False
+    t_submit: float = dataclasses.field(default_factory=time.perf_counter)
+    t_admit: float = 0.0
+    t_finish: float = 0.0
+    result: Optional[GenerationResult] = None
+
+    def finish(self, decode_text) -> GenerationResult:
+        self.t_finish = time.perf_counter()
+        self.result = GenerationResult(
+            text=decode_text(self.out_ids),
+            token_ids=list(self.out_ids),
+            n_forward_passes=self.n_fwd,
+            n_tokens=len(self.out_ids),
+            n_interventions=self.n_int,
+            n_spec_proposed=self.n_prop,
+            n_spec_accepted=self.n_acc,
+            mask_time_s=self.mask_time,
+            model_time_s=self.model_time,
+            wall_time_s=self.t_finish - self.t_submit,
+            finished=self.finished_eos,
+            dead_end=self.dead_end,
+        )
+        return self.result

@@ -1,5 +1,6 @@
-"""Ragged batched constrained serving: lockstep decode with per-request
-cache lengths must reproduce single-request outputs exactly."""
+"""Batched constrained serving through the continuous-batching scheduler:
+ragged per-request cache lengths must reproduce single-request outputs
+exactly."""
 import jax
 import pytest
 
@@ -68,7 +69,9 @@ def test_batch_mla_arch(small_tokenizer):
         assert s.token_ids == b.token_ids
 
 
-def test_batch_rejects_recurrent_archs(small_tokenizer):
+def test_batch_recurrent_arch_matches_single(small_tokenizer):
+    """Recurrent (SSM) rows are admitted by exact-length prefill, so the
+    continuous-batching path now covers them too."""
     from repro.configs.base import SSMConfig
     tok = small_tokenizer
     cfg = ModelConfig(arch_id="b-ssm", family="ssm", group=("mamba1",),
@@ -76,8 +79,12 @@ def test_batch_rejects_recurrent_archs(small_tokenizer):
                       ssm=SSMConfig(d_state=8, version=1), **BASE)
     m = build_model(cfg)
     params = m.init(jax.random.PRNGKey(0))
-    eng = ServingEngine(m, params, tok, None,
-                        EngineConfig(mode="unconstrained", max_tokens=4),
+    g = grammars.load("json")
+    eng = ServingEngine(m, params, tok, g,
+                        EngineConfig(mode="domino", max_tokens=8),
                         max_len=128)
-    with pytest.raises(AssertionError):
-        eng.generate_batch(["a", "b"])
+    prompts = ["a", "bb longer: "]
+    singles = [eng.generate(p) for p in prompts]
+    batch = eng.generate_batch(prompts)
+    for s, b in zip(singles, batch):
+        assert s.token_ids == b.token_ids

@@ -51,6 +51,21 @@ def test_engine_healing_speculative(setup):
     assert r2.n_tokens > 0
 
 
+def test_batched_healing_matches_single(setup, json_grammar):
+    """Scheduler sessions heal prompt boundaries exactly like the
+    single-request path."""
+    m, params, tok = setup
+    eng = ServingEngine(m, params, tok, json_grammar,
+                        EngineConfig(mode="domino", heal=2, max_tokens=12),
+                        max_len=512)
+    prompts = ['data: {"', 'obj: {"']
+    singles = [eng.generate(p) for p in prompts]
+    batch = eng.generate_batch(prompts)
+    for s, b in zip(singles, batch):
+        assert s.token_ids == b.token_ids
+        assert b.text.lstrip().startswith("{")
+
+
 def test_regex_decoder_outlines_baseline(small_tokenizer):
     tok = small_tokenizer
     rd = RegexDecoder(r"[1-9][0-9]*\.[0-9]+", list(tok.vocab), tok.eos_id)

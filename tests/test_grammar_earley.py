@@ -1,5 +1,6 @@
 """Grammar parsing + Earley recognizer."""
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import grammars
