@@ -14,10 +14,12 @@ masking) vs serving the same requests sequentially.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 from benchmarks.common import emit, get_model_and_params
 from repro.core import grammars
+from repro.models import build_model
 from repro.serving import (ContinuousBatchingScheduler, EngineConfig,
                            ServingEngine)
 
@@ -138,7 +140,48 @@ def run_serving(model, params, tok, verbose: bool = True):
               f"fwd {row['fwd_batch']} vs {row['fwd_seq']})", flush=True)
     emit("table3_serving_continuous", row["batch_tok_per_s"],
          f"speedup={row['speedup']:.3f};fwd={row['fwd_batch']}")
-    return {("serving", "continuous"): row}
+    out = {("serving", "continuous"): row}
+    out.update(run_serving_fused(model, params, tok, verbose=verbose))
+    return out
+
+
+def run_serving_fused(model, params, tok, verbose: bool = True):
+    """Ragged-fused vs dense-fallback batched decode: the same continuous
+    batch served with ``use_pallas_kernels`` on (every batched decode step
+    reads the cache through the ragged flash-decode kernel) and off (dense
+    jnp attention over the full cache).  On CPU the kernel runs
+    interpreted, so absolute wall time is NOT the TPU story — the
+    hardware-independent quantity is the per-step cache traffic ratio
+    reported by ``kernel_bench``; this row exists to pin the routing and
+    track the two paths' trajectories."""
+    g = grammars.load("json")
+    prompts = [f"request {i}, a JSON value: " for i in range(3)]
+    rows = {}
+    for label, fused in (("dense_fallback", False), ("ragged_fused", True)):
+        cfg = dataclasses.replace(model.cfg, use_pallas_kernels=fused)
+        eng = ServingEngine(build_model(cfg), params, tok, g,
+                            EngineConfig(mode="domino", max_tokens=24),
+                            max_len=1024)
+        eng.precompute()
+        warm = ContinuousBatchingScheduler(eng, capacity=len(prompts))
+        for p in prompts:
+            warm.submit(p)
+        warm.run()                      # compile warmup for this path
+        sched = ContinuousBatchingScheduler(eng, capacity=len(prompts))
+        for p in prompts:
+            sched.submit(p)
+        t0 = time.perf_counter()
+        res = sched.run()
+        wall = time.perf_counter() - t0
+        toks = sum(max(1, r.n_tokens) for r in res)
+        rows[label] = {"tok_per_s": toks / wall, "fwd": sched.n_fwd}
+        if verbose:
+            print(f"  [table3] serving      {label:14s}"
+                  f"{rows[label]['tok_per_s']:8.1f} tok/s "
+                  f"(fwd {sched.n_fwd})", flush=True)
+        emit(f"table3_serving_{label}", rows[label]["tok_per_s"],
+             f"fwd={sched.n_fwd}")
+    return {("serving", "fused_vs_fallback"): rows}
 
 
 if __name__ == "__main__":

@@ -1,18 +1,36 @@
-"""Flash-decode GQA attention against a KV cache (Pallas TPU).
+"""Ragged flash-decode GQA attention against a KV cache (Pallas TPU).
 
-The dominant bytes-consumer of ``decode_32k`` / ``long_500k``: one query
-token attends a T-long cache.  Arithmetic intensity is O(1) FLOP/byte, so
-the kernel's job is to stream K/V through VMEM exactly once with an
-online-softmax accumulator — no (T,) score vector in HBM, no second pass.
+The dominant bytes-consumer of ``decode_32k`` / ``long_500k`` *and* of the
+continuous-batching serving hot path: a short query window attends a
+T-long cache.  Arithmetic intensity is O(1) FLOP/byte, so the kernel's job
+is to stream K/V through VMEM exactly once with an online-softmax
+accumulator — no (T,) score vector in HBM, no second pass — and, in a
+ragged batch, to stream only the tiles each row actually owns.
 
-Layout: q (B, G, Q, D) where G = n_kv heads and Q = n_q/G query heads per
-group; k/v (B, T, G, D); ``length`` (1,) int32 in SMEM masks unwritten
-cache slots.  Grid (B, G, T/BLOCK_T) — the T axis is minor, so VMEM
-scratch (m, l, acc) carries across cache tiles of one (batch, group).
+Layout: q (B, S, G, Qh, Dk) where S = query window (1 for plain decode,
+1+spec_s for a speculative verify window), G = n_kv heads and Qh = n_q/G
+query heads per group; k (B, T, G, Dk); v (B, T, G, Dv) — Dv may differ
+from Dk, and an optional second (q2, k2) operand pair adds a split score
+term (absorbed-MLA scores q_lat.c_kv^T + q_rope.k_rope^T against Dv = r
+latent values, streaming both caches exactly as stored).  ``lengths`` is
+a per-row (B,) int32 vector (a scalar
+broadcasts): query position s of row b attends keys t < lengths[b] + s,
+i.e. ``lengths`` counts the keys visible to the *first* window position
+and later positions extend causally one key at a time.
 
-VMEM working set per step: BLOCK_T*(2D) halves of K/V + Q*D accumulators
-— with D=128, BLOCK_T=512: ~256 KiB, comfortably inside the ~16 MiB VMEM
-budget; BLOCK_T is the §Perf tuning knob.
+Grid (B, G, T/BLOCK_T) — the T axis is minor, so VMEM scratch (m, l, acc)
+carries across cache tiles of one (batch, group).  Raggedness is handled
+twice over:
+  * ``pl.when(j * BLOCK_T < lengths[b] + S - 1)`` skips compute on tiles
+    fully beyond the row's frontier, and
+  * the K/V index maps clamp the tile index to the row's last live tile,
+    so the pipeline re-addresses the same block and elides the HBM copy —
+    row b moves ceil((lengths[b]+S-1)/BLOCK_T) tiles, not T/BLOCK_T.
+
+VMEM working set per step: BLOCK_T*(Dk+Dv) halves of K/V + S*Qh*(Dv+2)
+f32 accumulators — with Dk=Dv=128, BLOCK_T=512, S*Qh<=32: ~600 KiB,
+comfortably inside the ~16 MiB VMEM budget; BLOCK_T is the §Perf tuning
+knob.
 """
 from __future__ import annotations
 
@@ -26,9 +44,17 @@ from jax.experimental.pallas import tpu as pltpu
 NEG = -1e30
 
 
-def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-            block_t: int, n_blocks: int, scale: float):
+def _kernel(len_ref, q_ref, k_ref, v_ref, *rest,
+            block_t: int, n_blocks: int, s_win: int, qh: int, scale: float,
+            split_k: bool):
+    if split_k:                             # second (q2, k2) score operand
+        q2_ref, k2_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
+    i = pl.program_id(0)
     j = pl.program_id(2)
+    base = len_ref[i]                       # keys visible to window pos 0
+    frontier = base + s_win - 1             # keys visible to the last pos
 
     @pl.when(j == 0)
     def _init():
@@ -36,64 +62,111 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    q = q_ref[0, 0].astype(jnp.float32)                 # (Q, D)
-    k = k_ref[0, :, 0].astype(jnp.float32)              # (BT, D)
-    v = v_ref[0, :, 0].astype(jnp.float32)              # (BT, D)
-    length = len_ref[0]
+    @pl.when(j * block_t < frontier)        # early-exit past the frontier
+    def _accumulate():
+        q = q_ref[0, :, 0].reshape(s_win * qh, q_ref.shape[-1])
+        q = q.astype(jnp.float32)                        # (S*Qh, Dk)
+        k = k_ref[0, :, 0].astype(jnp.float32)           # (BT, Dk)
+        v = v_ref[0, :, 0].astype(jnp.float32)           # (BT, Dv)
 
-    s = jnp.dot(q, k.T) * scale                          # (Q, BT)
-    t_idx = j * block_t + jax.lax.broadcasted_iota(
-        jnp.int32, (1, block_t), 1)
-    s = jnp.where(t_idx < length, s, NEG)
+        s = jnp.dot(q, k.T)                              # (S*Qh, BT)
+        if split_k:
+            q2 = q2_ref[0, :, 0].reshape(s_win * qh, q2_ref.shape[-1])
+            k2 = k2_ref[0, :, 0].astype(jnp.float32)     # (BT, D2)
+            s = s + jnp.dot(q2.astype(jnp.float32), k2.T)
+        s = s * scale
+        t_idx = j * block_t + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_t), 1)
+        # row r of the flattened (S*Qh) axis sits at window pos r // Qh
+        w_pos = jax.lax.broadcasted_iota(
+            jnp.int32, (s_win * qh, 1), 0) // qh
+        valid = t_idx < base + w_pos                     # (S*Qh, BT)
+        s = jnp.where(valid, s, NEG)
 
-    m_prev = m_scr[...]                                  # (Q, 1)
-    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
-    p = jnp.exp(s - m_new)                               # (Q, BT)
-    corr = jnp.exp(m_prev - m_new)                       # (Q, 1)
-    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
-    acc_scr[...] = acc_scr[...] * corr + jnp.dot(p, v)   # (Q, D)
-    m_scr[...] = m_new
+        m_prev = m_scr[...]                              # (S*Qh, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        # explicit re-mask: on an all-masked row s - m_new == 0, and the
+        # exp would count dead keys into l (divergence vs ref on empty
+        # rows / skipped tiles)
+        p = jnp.where(valid, jnp.exp(s - m_new), 0.0)    # (S*Qh, BT)
+        corr = jnp.exp(m_prev - m_new)                   # (S*Qh, 1)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jnp.dot(p, v)
+        m_scr[...] = m_new
 
     @pl.when(j == n_blocks - 1)
     def _done():
-        o_ref[0, 0] = (acc_scr[...] /
-                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0] = out.reshape(
+            s_win, qh, o_ref.shape[-1]).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("block_t", "interpret"))
+                   static_argnames=("block_t", "interpret", "scale"))
 def decode_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
-                            length: jnp.ndarray, block_t: int = 512,
-                            interpret: bool = True) -> jnp.ndarray:
-    """q (B,G,Q,D); k,v (B,T,G,D); length () or (1,) int32 -> (B,G,Q,D)."""
-    b, g, nq, d = q.shape
+                            lengths: jnp.ndarray, block_t: int = 512,
+                            interpret: bool = True,
+                            scale: float | None = None,
+                            q2: jnp.ndarray | None = None,
+                            k2: jnp.ndarray | None = None) -> jnp.ndarray:
+    """q (B,S,G,Qh,Dk); k (B,T,G,Dk); v (B,T,G,Dv); lengths (B,) int32
+    (scalar broadcasts) -> (B,S,G,Qh,Dv).  Window pos s of row b attends
+    keys t < lengths[b] + s.
+
+    Optional split scores: with q2 (B,S,G,Qh,D2) / k2 (B,T,G,D2) the tile
+    score is (q.k^T + q2.k2^T) * scale.  Absorbed MLA uses this to run
+    the latent (c_kv) and rope (k_rope) caches as-is — no per-step O(T)
+    key concatenation on the host side."""
+    b, s_win, g, qh, dk = q.shape
     t = k.shape[1]
+    dv = v.shape[-1]
     if t % block_t != 0:
         block_t = t
     n_blocks = t // block_t
-    scale = 1.0 / (d ** 0.5)
-    length = jnp.reshape(length, (1,)).astype(jnp.int32)
+    if scale is None:
+        scale = 1.0 / (dk ** 0.5)
+    lengths = jnp.broadcast_to(
+        jnp.asarray(lengths, jnp.int32).reshape(-1), (b,))
+    split_k = q2 is not None
     kernel = functools.partial(_kernel, block_t=block_t, n_blocks=n_blocks,
-                               scale=scale)
+                               s_win=s_win, qh=qh, scale=scale,
+                               split_k=split_k)
+
+    def kv_map(i, h, j, len_ref):
+        # clamp to the row's last live tile: once past the frontier the
+        # block index stops changing and the pipeline skips the HBM copy
+        last = jnp.maximum(len_ref[i] + s_win - 2, 0) // block_t
+        return (i, jnp.minimum(j, last), h, 0)
+
+    def q_map(i, h, j, *_):
+        return (i, 0, h, 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, s_win, 1, qh, dk), q_map),
+        pl.BlockSpec((1, block_t, 1, dk), kv_map),
+        pl.BlockSpec((1, block_t, 1, dv), kv_map),
+    ]
+    operands = [lengths, q, k, v]
+    if split_k:
+        d2 = q2.shape[-1]
+        in_specs += [pl.BlockSpec((1, s_win, 1, qh, d2), q_map),
+                     pl.BlockSpec((1, block_t, 1, d2), kv_map)]
+        operands += [q2, k2]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b, g, n_blocks),
-        in_specs=[
-            pl.BlockSpec((1, 1, nq, d), lambda i, h, j, *_: (i, h, 0, 0)),
-            pl.BlockSpec((1, block_t, 1, d), lambda i, h, j, *_: (i, j, h, 0)),
-            pl.BlockSpec((1, block_t, 1, d), lambda i, h, j, *_: (i, j, h, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, nq, d), lambda i, h, j, *_: (i, h, 0, 0)),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, s_win, 1, qh, dv), q_map),
         scratch_shapes=[
-            pltpu.VMEM((nq, 1), jnp.float32),
-            pltpu.VMEM((nq, 1), jnp.float32),
-            pltpu.VMEM((nq, d), jnp.float32),
+            pltpu.VMEM((s_win * qh, 1), jnp.float32),
+            pltpu.VMEM((s_win * qh, 1), jnp.float32),
+            pltpu.VMEM((s_win * qh, dv), jnp.float32),
         ],
     )
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, g, nq, d), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, s_win, g, qh, dv), q.dtype),
         interpret=interpret,
-    )(length, q, k, v)
+    )(*operands)
     return out

@@ -1,4 +1,4 @@
-"""Jitted public wrapper for flash-decode attention."""
+"""Jitted public wrapper for ragged flash-decode attention."""
 from __future__ import annotations
 
 import jax
@@ -7,11 +7,25 @@ from repro.kernels.decode_attention.kernel import decode_attention_pallas
 from repro.kernels.decode_attention.ref import decode_attention_ref
 
 
-def decode_attention(q, k, v, length, use_ref: bool = False,
-                     block_t: int = 512):
-    """q (B,G,Q,D); k,v (B,T,G,D); length () int32 -> (B,G,Q,D)."""
+def decode_attention(q, k, v, lengths, use_ref: bool = False,
+                     block_t: int = 512, scale=None, q2=None, k2=None):
+    """q (B,S,G,Qh,Dk) — or (B,G,Qh,Dk), read as S=1; k (B,T,G,Dk);
+    v (B,T,G,Dv); lengths () or (B,) int32 -> matching q's rank.
+
+    ``lengths`` counts the keys visible to the first window position;
+    window position s of row b attends keys t < lengths[b] + s.
+    Optional (q2, k2) adds a second score term (absorbed-MLA latent+rope
+    split): score = (q.k^T + q2.k2^T) * scale.
+    """
     if use_ref:
-        return decode_attention_ref(q, k, v, length)
+        return decode_attention_ref(q, k, v, lengths, scale=scale,
+                                    q2=q2, k2=k2)
+    squeeze = q.ndim == 4
+    if squeeze:
+        q = q[:, None]
+        q2 = None if q2 is None else q2[:, None]
     on_tpu = jax.default_backend() == "tpu"
-    return decode_attention_pallas(q, k, v, length, block_t=block_t,
-                                   interpret=not on_tpu)
+    out = decode_attention_pallas(q, k, v, lengths, block_t=block_t,
+                                  interpret=not on_tpu, scale=scale,
+                                  q2=q2, k2=k2)
+    return out[:, 0] if squeeze else out

@@ -1,19 +1,41 @@
-"""Pure-jnp oracle for the flash-decode kernel."""
+"""Pure-jnp oracle for the ragged flash-decode kernel."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 
-def decode_attention_ref(q, k, v, length):
-    """q (B,G,Q,D); k,v (B,T,G,D); length scalar -> (B,G,Q,D)."""
-    b, g, nq, d = q.shape
+def decode_attention_ref(q, k, v, lengths, scale=None, q2=None, k2=None):
+    """q (B,S,G,Qh,Dk) — or (B,G,Qh,Dk), read as S=1; k (B,T,G,Dk);
+    v (B,T,G,Dv); lengths () or (B,) int32 -> (B,S,G,Qh,Dv).
+
+    Window position s of row b attends keys t < lengths[b] + s (causal
+    offsets across a speculative verify window).  Rows with no visible
+    key produce zeros, matching the kernel's early-exit convention.
+    Optional split scores (q2, k2): score = (q.k^T + q2.k2^T) * scale,
+    the absorbed-MLA latent+rope decomposition.
+    """
+    squeeze = q.ndim == 4
+    if squeeze:
+        q = q[:, None]
+        q2 = None if q2 is None else q2[:, None]
+    b, s_win, g, qh, dk = q.shape
     t = k.shape[1]
-    scale = 1.0 / (d ** 0.5)
-    s = jnp.einsum("bgqd,btgd->bgqt", q.astype(jnp.float32),
-                   k.astype(jnp.float32)) * scale
-    valid = jnp.arange(t) < length
-    s = jnp.where(valid[None, None, None, :], s, -1e30)
-    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
-    p = p / p.sum(axis=-1, keepdims=True)
-    out = jnp.einsum("bgqt,btgd->bgqd", p, v.astype(jnp.float32))
-    return out.astype(q.dtype)
+    if scale is None:
+        scale = 1.0 / (dk ** 0.5)
+    lengths = jnp.broadcast_to(
+        jnp.asarray(lengths, jnp.int32).reshape(-1), (b,))
+    s = jnp.einsum("bsgqd,btgd->bsgqt", q.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    if q2 is not None:
+        s = s + jnp.einsum("bsgqd,btgd->bsgqt", q2.astype(jnp.float32),
+                           k2.astype(jnp.float32))
+    s = s * scale
+    limit = lengths[:, None] + jnp.arange(s_win, dtype=jnp.int32)  # (B,S)
+    valid = jnp.arange(t)[None, None, :] < limit[:, :, None]       # (B,S,T)
+    vmask = valid[:, :, None, None, :]
+    s = jnp.where(vmask, s, -1e30)
+    p = jnp.where(vmask, jnp.exp(s - s.max(axis=-1, keepdims=True)), 0.0)
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bsgqt,btgd->bsgqd", p, v.astype(jnp.float32))
+    out = out.astype(q.dtype)
+    return out[:, 0] if squeeze else out

@@ -23,6 +23,9 @@ def main() -> None:
     ap.add_argument("--prompts", type=int, default=2)
     ap.add_argument("--slots", type=int, default=4,
                     help="continuous-batching decode slots")
+    ap.add_argument("--kernels", action="store_true",
+                    help="route decode through the fused Pallas kernels "
+                         "(ragged flash-decode; interpret mode off-TPU)")
     ap.add_argument("--checkpoint", default=None)
     args = ap.parse_args()
 
@@ -57,6 +60,9 @@ def main() -> None:
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
 
+    if args.kernels:
+        cfg = dataclasses.replace(cfg, use_pallas_kernels=True)
+        model = build_model(cfg)
     ecfg = EngineConfig(
         mode=args.mode, k=(None if args.k < 0 else args.k),
         opportunistic=args.opportunistic, speculative=args.speculative,

@@ -13,6 +13,15 @@ The cache for a scanned group of layers is the same pytree with a leading
 stacked layer params.  ``len`` is a single int32 scalar for the whole model
 (batch-synchronous decoding) or an (B,) int32 vector for ragged /
 continuous-batching serving.
+
+Validity invariant: entries at positions >= len are garbage by contract —
+speculative rollback rewinds ``len`` past rejected tokens, bucketed
+admission prefills leave pad K/V beyond the true prompt length, and freed
+serving slots keep their stale rows until the next admission scatters over
+them.  Every reader masks by ``pos < len`` (the dense paths via
+``k_valid``; ``kernels/decode_attention`` via its per-row length vector,
+which also bounds how many cache tiles each row streams), and writers
+append at ``len``, overwriting garbage first.
 """
 from __future__ import annotations
 

@@ -263,11 +263,20 @@ def mla_apply_absorbed(params: Params, cfg: ModelConfig, x: jnp.ndarray,
                        q_pos: jnp.ndarray,
                        latent: Tuple[jnp.ndarray, jnp.ndarray],
                        k_pos: jnp.ndarray,
-                       k_valid: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+                       k_valid: Optional[jnp.ndarray] = None,
+                       lengths: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Absorbed MLA decode (DeepSeek-V3): W_uk folds into the query and
     W_uv into the output, so attention runs directly against the compressed
     (B,T,r) latent — the whole point of MLA's small cache.  Never
     materializes per-head K/V of the context.
+
+    With ``lengths`` set and ``cfg.use_pallas_kernels``, the latent read
+    runs through the fused ragged flash-decode kernel: one KV group whose
+    score splits into latent (q_lat . c_kv) + rope (q_rope . k_rope)
+    terms and whose values are the latent itself (Dv = r) — the cache
+    buffers stream tile-by-tile exactly as stored, no per-step O(T) key
+    concatenation; same per-row lengths / causal window semantics as the
+    GQA path.
     """
     m = cfg.mla
     nq = cfg.n_heads
@@ -278,12 +287,24 @@ def mla_apply_absorbed(params: Params, cfg: ModelConfig, x: jnp.ndarray,
     w_uk, w_uv = _mla_uk_uv(params, cfg)
     q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)    # (B,S,H,r)
     scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
-    scores = (jnp.einsum("bshr,btr->bhst", q_lat, c_kv)
-              + jnp.einsum("bshd,btd->bhst", q_rope, k_rope[:, :, 0]))
-    scores = scores.astype(jnp.float32) * scale
-    bias = causal_bias(q_pos, k_pos, None, k_valid)[:, :, 0]  # (B,1,S,T)
-    probs = jax.nn.softmax(scores + bias, axis=-1).astype(x.dtype)
-    ctx_lat = jnp.einsum("bhst,btr->bshr", probs, c_kv)    # (B,S,H,r)
+    if lengths is not None and cfg.use_pallas_kernels:
+        from repro.kernels.decode_attention.ops import \
+            decode_attention  # local: avoid cycle
+        # k == v == the latent cache itself; k_rope rides as the split
+        # (q2, k2) score term — axis inserts are views, nothing O(T) is
+        # materialized per step
+        ctx_lat = decode_attention(
+            q_lat[:, :, None], c_kv[:, :, None], c_kv[:, :, None],
+            lengths, scale=scale,
+            q2=q_rope[:, :, None], k2=k_rope)[:, :, 0]
+        ctx_lat = ctx_lat.astype(x.dtype)                  # (B,S,H,r)
+    else:
+        scores = (jnp.einsum("bshr,btr->bhst", q_lat, c_kv)
+                  + jnp.einsum("bshd,btd->bhst", q_rope, k_rope[:, :, 0]))
+        scores = scores.astype(jnp.float32) * scale
+        bias = causal_bias(q_pos, k_pos, None, k_valid)[:, :, 0]  # (B,1,S,T)
+        probs = jax.nn.softmax(scores + bias, axis=-1).astype(x.dtype)
+        ctx_lat = jnp.einsum("bhst,btr->bshr", probs, c_kv)    # (B,S,H,r)
     out = jnp.einsum("bshr,rhd->bshd", ctx_lat, w_uv)
     return out.reshape(b, s, nq * m.v_head_dim) @ params["wo"]
 

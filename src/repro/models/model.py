@@ -162,17 +162,33 @@ class Model:
     def prefill(self, params: Params, inputs: Dict[str, jnp.ndarray],
                 cache) -> Tuple[jnp.ndarray, Any]:
         """Run the prompt, fill the cache.  Returns (last-position logits,
-        cache).  Batched serving prefills each request at its exact length
-        (B=1) and scatters the row into its slot, so only the last
-        position's logits are ever needed."""
+        cache).  Batched serving prefills each request (B=1) and scatters
+        the row into its slot, so only the last position's logits are ever
+        needed.
+
+        ``inputs`` may carry a scalar int32 ``length``: the prompt is then
+        right-padded to a bucket size (serving admission pads to powers of
+        two so compile count stays O(log max_len)) and only the first
+        ``length`` tokens are real.  The head is read at the true last
+        token and ``cache['len']`` advances by ``length``, so pad KV
+        entries sit beyond the valid frontier — masked by the pos < len
+        validity rule and overwritten as decode proceeds.  Full-attention
+        / MLA caches only: ring (SWA) and recurrent (SSM) state would
+        absorb the pads (callers gate on the refeed predicate).
+        """
         x, enc_out = self._assemble(params, inputs)
         b, s, _ = x.shape
         pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
         ctx = Ctx(mode="prefill", q_pos=pos, cache_len=cache["len"],
                   max_len=0, enc_out=enc_out)
         x, _, new_cache = stack_apply(params["stack"], self.cfg, x, ctx, cache)
-        new_cache["len"] = cache["len"] + s
-        return self._head(params, x[:, -1:]), new_cache
+        length = inputs.get("length")
+        if length is None:
+            new_cache["len"] = cache["len"] + s
+            return self._head(params, x[:, -1:]), new_cache
+        new_cache["len"] = cache["len"] + length
+        last = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
+        return self._head(params, last), new_cache
 
     def decode_step(self, params: Params, cache,
                     tokens: jnp.ndarray) -> Tuple[jnp.ndarray, Any]:

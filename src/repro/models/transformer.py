@@ -127,12 +127,14 @@ def _self_attention(p: Params, cfg: ModelConfig, xn: jnp.ndarray, ctx: Ctx,
             new_cache = _write_kv(cache, cfg, k_new, v_new, ctx, window)
             t = new_cache["k"].shape[1]
             k_all, v_all = _read_kv(new_cache, xn.dtype)
-            if cfg.use_pallas_kernels and s == 1 and not ctx.ragged:
-                # fused flash-decode kernel: q (B,G,Qh,D) vs cache (B,T,G,D)
+            if cfg.use_pallas_kernels:
+                # fused ragged flash-decode: q (B,S,G,Qh,D) vs cache
+                # (B,T,G,D); per-row lengths and the S>1 speculative
+                # verify window (causal offsets) are handled in-kernel,
+                # so the batched serving path never takes the dense read
                 from repro.kernels.decode_attention.ops import \
                     decode_attention
-                out = decode_attention(qg[:, 0], k_all, v_all,
-                                       ctx.cache_len + 1)[:, None]
+                out = decode_attention(qg, k_all, v_all, ctx.cache_len + 1)
             else:
                 k_pos = jnp.broadcast_to(
                     jnp.arange(t, dtype=jnp.int32), (b, t))
@@ -275,12 +277,21 @@ def _mla_attention(p: Params, cfg: ModelConfig, xn: jnp.ndarray, ctx: Ctx,
             new_cache["krope"] = jax.lax.dynamic_update_slice(
                 cache["krope"], k_rope, (0, ctx.cache_len, 0, 0))
         t = new_cache["ckv"].shape[1]
-        k_pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
-        lim = (ctx.cache_len[:, None] if ctx.ragged else ctx.cache_len) + s
-        k_valid = k_pos < lim
-        out = mla_apply_absorbed(p, cfg, xn, ctx.q_pos,
-                                 (new_cache["ckv"], new_cache["krope"]),
-                                 k_pos, k_valid)
+        if cfg.use_pallas_kernels:
+            # fused ragged latent read (per-row lengths, causal window)
+            out = mla_apply_absorbed(p, cfg, xn, ctx.q_pos,
+                                     (new_cache["ckv"], new_cache["krope"]),
+                                     None, None,
+                                     lengths=ctx.cache_len + 1)
+        else:
+            k_pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+            lim = (ctx.cache_len[:, None] if ctx.ragged
+                   else ctx.cache_len) + s
+            k_valid = k_pos < lim
+            out = mla_apply_absorbed(p, cfg, xn, ctx.q_pos,
+                                     (new_cache["ckv"],
+                                      new_cache["krope"]),
+                                     k_pos, k_valid)
     return out, new_cache
 
 

@@ -161,14 +161,17 @@ class ServingEngine:
         p = p / p.sum()
         return int(self.rng.choice(len(p), p=p))
 
-    def _pick(self, logits: np.ndarray, checker
+    def _pick(self, logits: np.ndarray, checker, premask=None
               ) -> Tuple[Optional[int], int, float]:
         """Select the next token under the active constraint mode.
 
         Returns (token, intervened?, mask_seconds).  ``token`` is None when
         the checker reached a dead end (no legal token, EOS included) —
         callers surface this as ``GenerationResult.dead_end`` instead of
-        silently emitting grammar-violating output.
+        silently emitting grammar-violating output.  ``premask`` is a mask
+        the caller already built from the checker's current state (e.g.
+        the scheduler's host/device-overlapped prebuild); its build time
+        was accounted at build site, so it does not count here.
         """
         if checker is None:
             return self._select(logits, None), 0, 0.0
@@ -180,9 +183,12 @@ class ServingEngine:
             mask_t += time.perf_counter() - t0
             if ok:
                 return cand, 0, mask_t
-        t0 = time.perf_counter()
-        mask = checker.mask()
-        mask_t += time.perf_counter() - t0
+        if premask is not None:
+            mask = premask
+        else:
+            t0 = time.perf_counter()
+            mask = checker.mask()
+            mask_t += time.perf_counter() - t0
         if not mask.any():
             # the checker invariant makes this unreachable for sound
             # grammars; if it happens, report it rather than force EOS

@@ -7,19 +7,27 @@ prefilled into it, so the batch stays full under load instead of draining
 to the slowest request.
 
 Design points (ISSUE 1 tentpole):
- - admission prefills each request at its EXACT prompt length (B=1, no
-   padding) and scatters the resulting row cache into the slot — this is
-   what makes recurrent (SSM) and ring-buffer (SWA) rows correct: their
-   state never sees pad tokens;
+ - admission prefills each request at B=1 and scatters the resulting row
+   cache into the slot — this is what makes recurrent (SSM) and
+   ring-buffer (SWA) rows correct: their state never sees pad tokens.
+   Full-attention / MLA admissions are additionally padded to
+   power-of-two length buckets (with a true-length validity marker) so
+   the prefill compiles O(log max_len) programs under heavy traffic
+   instead of one per distinct prompt length;
  - every decode step runs ONE batched forward over all slots; grammar
    masks are applied device-side through the fused
    ``kernels/masked_sample`` Pallas op (host only ships the (B, V) bit
    mask and reads back (B,) token ids);
+ - the forward is dispatched asynchronously and the host builds the NEXT
+   step's grammar masks while the device executes (ISSUE 2 tentpole):
+   mask_time moves off the step critical path — it still accrues
+   per-session, with the hidden portion reported as ``mask_overlap_s``;
  - speculative decoding (paper §3.6) runs per-row: one (B, 1+s) decode
    verifies every row's proposal chain; rows on full-attention/MLA archs
    roll their per-row cache length back, rows on SSM/SWA archs re-feed
-   their accepted tokens from the pre-speculation cache (B=1, exact
-   length) and are scattered back into the slot;
+   their accepted tokens from the pre-speculation cache — grouped by
+   accepted length, so each group is one gather/decode/scatter round
+   instead of a B=1 decode per row;
  - all sessions share the engine's TreeCache (and count model); call
    ``warm()`` to run the offline ``precompute()`` pass before serving.
 
@@ -31,7 +39,7 @@ from __future__ import annotations
 
 import collections
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -65,21 +73,41 @@ def _scatter_row(dst, src, slot):
     return out
 
 
-def _gather_row(src, slot):
-    """Extract row ``slot`` of a batch cache as a B=1 row cache."""
-    def row0(a):
-        return jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=0)
+def _gather_rows(src, idx):
+    """Extract rows ``idx`` (traced (K,) int32) of a batch cache as a
+    B=K ragged cache (``len`` stays a vector, so the refeed decode takes
+    the per-row ragged write path)."""
+    def g0(a):
+        return jnp.take(a, idx, axis=0)
 
-    def row1(a):
-        return jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1)
+    def g1(a):
+        return jnp.take(a, idx, axis=1)
 
     return {
-        "len": jax.lax.dynamic_index_in_dim(src["len"], slot,
-                                            keepdims=False),
-        "head": [jax.tree.map(row0, c) for c in src["head"]],
-        "tail": [jax.tree.map(row0, c) for c in src["tail"]],
-        "group": {k: jax.tree.map(row1, v) for k, v in src["group"].items()},
+        "len": jnp.take(src["len"], idx, axis=0),
+        "head": [jax.tree.map(g0, c) for c in src["head"]],
+        "tail": [jax.tree.map(g0, c) for c in src["tail"]],
+        "group": {k: jax.tree.map(g1, v) for k, v in src["group"].items()},
     }
+
+
+def _scatter_rows(dst, src, idx):
+    """Write a B=K cache ``src`` back into rows ``idx`` of batch cache."""
+    def s0(d, s):
+        return d.at[idx].set(s)
+
+    def s1(d, s):
+        return d.at[:, idx].set(s)
+
+    out = dict(dst)
+    out["len"] = dst["len"].at[idx].set(src["len"])
+    out["head"] = [jax.tree.map(s0, dc, sc)
+                   for dc, sc in zip(dst["head"], src["head"])]
+    out["tail"] = [jax.tree.map(s0, dc, sc)
+                   for dc, sc in zip(dst["tail"], src["tail"])]
+    out["group"] = {k: jax.tree.map(s1, dst["group"][k], src["group"][k])
+                    for k in dst["group"]}
+    return out
 
 
 # admission: the old batch cache is dropped on assignment, so donate it —
@@ -87,16 +115,34 @@ def _gather_row(src, slot):
 _scatter_row_donate = jax.jit(_scatter_row, donate_argnums=(0,))
 # refeed fixup: the pre-speculation snapshot may share untouched leaves
 # (e.g. cross-attention xk/xv) with the current cache, so no donation
-_scatter_row_jit = jax.jit(_scatter_row)
-_gather_row_jit = jax.jit(_gather_row)
+_scatter_rows_jit = jax.jit(_scatter_rows)
+_gather_rows_jit = jax.jit(_gather_rows)
+
+
+def _bucket_len(n: int, cap: int) -> int:
+    """Smallest power of two >= n, clamped to the cache capacity."""
+    p = 1
+    while p < n:
+        p *= 2
+    return min(p, cap)
 
 
 class ContinuousBatchingScheduler:
-    """Admits requests into a fixed-capacity constrained decode batch."""
+    """Admits requests into a fixed-capacity constrained decode batch.
 
-    def __init__(self, engine, capacity: int = 4):
+    ``overlap`` pipelines host mask construction with device execution;
+    ``bucket_prefill`` pads full-attention/MLA admissions to power-of-two
+    prompt lengths.  Both default on; they are observationally pure
+    (token-for-token identical output) and exist as flags only so tests
+    and benchmarks can measure them.
+    """
+
+    def __init__(self, engine, capacity: int = 4, overlap: bool = True,
+                 bucket_prefill: bool = True):
         self.eng = engine
         self.capacity = max(1, capacity)
+        self.overlap = overlap
+        self.bucket_prefill = bucket_prefill
         self.waiting: "collections.deque[Session]" = collections.deque()
         self.slots: List[Optional[Session]] = [None] * self.capacity
         self.cache = engine.model.init_cache(self.capacity, engine.max_len)
@@ -104,6 +150,11 @@ class ContinuousBatchingScheduler:
         vpad = engine.model.padded_vocab
         self._logits = jnp.zeros((self.capacity, vpad), jnp.float32)
         self._raw_argmax = jax.jit(lambda lg: jnp.argmax(lg, axis=-1))
+        # masks prebuilt from each slot's current checker state while the
+        # device executed the previous forward; dropped on any checker
+        # advance / slot turnover (state changed -> mask stale)
+        self._premask: Dict[int, np.ndarray] = {}
+        self.premask_hits = 0          # selections served by a prebuild
         self.n_fwd = 0                 # global forward count (all slots)
         self._next_rid = 0
 
@@ -139,6 +190,7 @@ class ContinuousBatchingScheduler:
                 self._spec_step()
             else:
                 self._plain_step()
+        self._reset_vacant_lens()
         return self._finished_now
 
     # -- admission / eviction ---------------------------------------------------
@@ -148,8 +200,20 @@ class ContinuousBatchingScheduler:
         while self.waiting and None in self.slots:
             slot = self.slots.index(None)
             sess = self.waiting.popleft()
+            self._premask.pop(slot, None)
             row_cache = eng.model.init_cache(1, eng.max_len)
-            inputs = {"tokens": jnp.asarray([sess.prompt_ids], jnp.int32)}
+            ids = list(sess.prompt_ids)
+            inputs = {"tokens": jnp.asarray([ids], jnp.int32)}
+            if self.bucket_prefill and not eng._needs_refeed \
+                    and not sess.extra_inputs:
+                # power-of-two bucket: pads ride beyond the valid frontier
+                # (masked by pos < len, overwritten by later decodes), the
+                # head reads the true last token.  Gated off refeed archs:
+                # ring/recurrent state would absorb the pads.
+                p = _bucket_len(len(ids), eng.max_len)
+                inputs["tokens"] = jnp.asarray(
+                    [ids + [eng.tok.pad_id] * (p - len(ids))], jnp.int32)
+                inputs["length"] = jnp.asarray(len(ids), jnp.int32)
             if sess.extra_inputs:
                 inputs.update(sess.extra_inputs)
             t0 = time.perf_counter()
@@ -164,11 +228,48 @@ class ContinuousBatchingScheduler:
             sess.t_admit = time.perf_counter()
             self.slots[slot] = sess
 
+    def _reset_vacant_lens(self) -> None:
+        """Vacant slots' rows are garbage by contract, but every batched
+        forward still advances their ragged ``len`` — left alone, the
+        fused kernel would stream ever more dead cache tiles for freed
+        rows.  Pin them to 0 so the per-row early-exit actually skips
+        them (admission overwrites ``len`` when it scatters a new row)."""
+        if all(s is not None for s in self.slots):
+            return
+        occ = jnp.asarray([0 if s is None else 1 for s in self.slots],
+                          jnp.int32)
+        cache = dict(self.cache)
+        cache["len"] = cache["len"] * occ
+        self.cache = cache
+
     def _finish(self, sess: Session) -> None:
         sess.finish(self.eng.tok.decode)
         if sess.slot >= 0:
+            self._premask.pop(sess.slot, None)
             self.slots[sess.slot] = None
         self._finished_now.append(sess)
+
+    # -- mask pipeline ----------------------------------------------------------
+
+    def _prebuild_masks(self):
+        """Build the next selection's grammar masks from current checker
+        state.  Called while the device executes the just-dispatched
+        forward; build time accrues to per-session mask_time immediately,
+        but the overlap credit is decided by the caller (``_run_decode``)
+        once it knows whether the device actually outlasted the build.
+        Returns [(session, build_seconds), ...] for that decision."""
+        built = []
+        for slot, sess in enumerate(self.slots):
+            if sess is None or sess.checker is None \
+                    or slot in self._premask:
+                continue
+            t0 = time.perf_counter()
+            m = sess.checker.mask()
+            dt = time.perf_counter() - t0
+            sess.mask_time += dt
+            self._premask[slot] = m
+            built.append((sess, dt))
+        return built
 
     # -- token selection --------------------------------------------------------
 
@@ -199,9 +300,13 @@ class ContinuousBatchingScheduler:
                     masks[slot, raw[slot]] = 1
                     row_mask_bool[slot] = None
                     continue
-            t0 = time.perf_counter()
-            m = ch.mask()
-            sess.mask_time += time.perf_counter() - t0
+            m = self._premask.pop(slot, None)   # overlapped prebuild
+            if m is None:
+                t0 = time.perf_counter()
+                m = ch.mask()
+                sess.mask_time += time.perf_counter() - t0
+            else:
+                self.premask_hits += 1
             if not m.any():
                 sess.dead_end = True
                 self._finish(sess)
@@ -251,6 +356,7 @@ class ContinuousBatchingScheduler:
                 eng.speculator.observe(ch.state_key(), tok)
             if ch is not None:
                 ch.advance(tok)
+                self._premask.pop(slot, None)   # state moved: mask stale
             sess.out_ids.append(tok)
             sess.budget -= 1
             if sess.budget <= 0:
@@ -259,17 +365,34 @@ class ContinuousBatchingScheduler:
             live[slot] = tok
         return live
 
-    def _run_decode(self, feed: jnp.ndarray):
+    def _run_decode(self, feed: jnp.ndarray,
+                    overlap_fn: Optional[Callable[[], None]] = None):
         """One batched forward; attributes time/count to resident rows.
-        Blocks until the device finishes so per-request model_time_s
-        measures execution, not dispatch (the host would otherwise pay the
-        wait inside the next tick's argmax readback, attributed to
-        nothing)."""
+        The forward is dispatched asynchronously; ``overlap_fn`` (next
+        step's host-side mask construction) runs while the device
+        executes, then we block so per-request model_time_s measures
+        execution, not dispatch (the host would otherwise pay the wait
+        inside the next tick's argmax readback, attributed to nothing)."""
         eng = self.eng
         t0 = time.perf_counter()
         lg, self.cache = eng._decode(eng.params, self.cache, feed)
+        built = []
+        if overlap_fn is not None and self.overlap:
+            built = overlap_fn() or []
+        t_mask_end = time.perf_counter()
         lg.block_until_ready()
-        dt = time.perf_counter() - t0
+        wait = time.perf_counter() - t_mask_end
+        # overlap credit only when the device provably outlasted the
+        # prebuild (we still had to wait on it afterwards); if the build
+        # outran the device, the excess sat on the critical path — it
+        # stays in mask_time uncredited and is excluded from the model
+        # wall below, so the two fields still decompose the step
+        hidden = wait > 1e-5
+        m_total = sum(b_dt for _, b_dt in built)
+        if hidden:
+            for b_sess, b_dt in built:
+                b_sess.mask_overlap += b_dt
+        dt = time.perf_counter() - t0 - (0.0 if hidden else m_total)
         self.n_fwd += 1
         for sess in self.slots:
             if sess is not None:
@@ -285,7 +408,8 @@ class ContinuousBatchingScheduler:
         feed = [[eng.tok.pad_id]] * self.capacity
         for slot, tok in live.items():
             feed[slot] = [tok]
-        lg = self._run_decode(jnp.asarray(feed, jnp.int32))
+        lg = self._run_decode(jnp.asarray(feed, jnp.int32),
+                              overlap_fn=self._prebuild_masks)
         self._logits = lg[:, -1].astype(jnp.float32)
 
     # -- speculative decode tick (§3.6) -----------------------------------------
@@ -309,7 +433,8 @@ class ContinuousBatchingScheduler:
             feed = [[pad]] * self.capacity
             for slot, tok in live.items():
                 feed[slot] = [tok]
-            lg = self._run_decode(jnp.asarray(feed, jnp.int32))
+            lg = self._run_decode(jnp.asarray(feed, jnp.int32),
+                                  overlap_fn=self._prebuild_masks)
             self._logits = lg[:, -1].astype(jnp.float32)
             return
         width = 1 + eng.cfg.spec_s
@@ -319,7 +444,11 @@ class ContinuousBatchingScheduler:
             feed[slot][:len(row)] = row
         snapshot = self.cache          # JAX arrays are immutable: free
         snap_len = snapshot["len"]
-        lg_dev = self._run_decode(jnp.asarray(feed, jnp.int32))
+        # overlapped prebuild: checker state is post-commit, i.e. exactly
+        # the state verification position 0 selects from — _verify_row
+        # consumes the mask, and untouched rows keep it for the next tick
+        lg_dev = self._run_decode(jnp.asarray(feed, jnp.int32),
+                                  overlap_fn=self._prebuild_masks)
         lg_host = np.asarray(lg_dev)[:, :, :eng._v]
         # rows not in `live` consumed the full pad width; "accepting" it
         # keeps their (garbage, to-be-overwritten) length bookkeeping
@@ -361,7 +490,17 @@ class ContinuousBatchingScheduler:
                 if ok:
                     tok_i = prop
             if tok_i is None:
-                tok_i, intervened, mask_dt = eng._pick(lg_row[i], ch)
+                # position 0 selects from the state the overlapped
+                # prebuild saw; later positions advanced past it
+                pre = self._premask.pop(slot, None) if i == 0 else None
+                # under opportunistic mode _pick may accept the raw
+                # argmax without reading the premask — don't count a hit
+                # we can't attest
+                if not (eng.cfg.opportunistic
+                        and eng.cfg.temperature <= 0.0):
+                    self.premask_hits += int(pre is not None)
+                tok_i, intervened, mask_dt = eng._pick(lg_row[i], ch,
+                                                       premask=pre)
                 sess.mask_time += mask_dt
                 if tok_i is None:          # dead end mid-verification
                     sess.dead_end = True
@@ -371,6 +510,7 @@ class ContinuousBatchingScheduler:
                 break
             eng.speculator.observe(ch.state_key(), tok_i)
             ch.advance(tok_i)
+            self._premask.pop(slot, None)   # state moved: mask stale
             accepted += 1
             if tok_i == eng.tok.eos_id:
                 sess.finished_eos = True
@@ -384,11 +524,16 @@ class ContinuousBatchingScheduler:
 
     def _fixup_refeed(self, snapshot, live, proposals, accepted_vec,
                       lg_dev) -> None:
-        """SSM/SWA rows cannot rewind state: re-feed each partially-accepted
-        row's committed tokens from the pre-speculation cache (B=1, exact
-        length) and scatter the result back into its slot."""
+        """SSM/SWA rows cannot rewind state: re-feed each partially-
+        accepted row's committed tokens from the pre-speculation cache.
+        Rows are grouped by committed length, so each group is ONE
+        gather/decode/scatter round (B=K ragged refeed) instead of a B=1
+        decode plus whole-cache scatter per row — one compile per
+        (group size, width) pair, bounded by capacity x spec_s."""
         eng = self.eng
         s_max = eng.cfg.spec_s
+        groups: Dict[int, List[int]] = {}
+        committed: Dict[int, List[int]] = {}
         for slot, tok in live.items():
             sess = self.slots[slot]
             if sess is None:
@@ -402,15 +547,24 @@ class ContinuousBatchingScheduler:
                 self._logits = self._logits.at[slot].set(
                     lg_dev[slot, -1].astype(jnp.float32))
                 continue
-            committed = [tok] + props[:a]
-            row = _gather_row_jit(snapshot, slot)
+            groups.setdefault(a, []).append(slot)
+            committed[slot] = [tok] + props[:a]
+        for a, slots in groups.items():
+            idx = jnp.asarray(slots, jnp.int32)
+            feed = jnp.asarray([committed[s] for s in slots], jnp.int32)
             t0 = time.perf_counter()
-            lg_re, row = eng._decode(
-                eng.params, row, jnp.asarray([committed], jnp.int32))
-            self.cache = _scatter_row_jit(self.cache, row, slot)
-            self._logits = self._logits.at[slot].set(
-                lg_re[0, -1].astype(jnp.float32))
+            rows = _gather_rows_jit(snapshot, idx)
+            lg_re, rows = eng._decode(eng.params, rows, feed)
+            self.cache = _scatter_rows_jit(self.cache, rows, idx)
+            self._logits = self._logits.at[idx].set(
+                lg_re[:, -1].astype(jnp.float32))
+            # block so model_time measures execution, not dispatch (the
+            # wait would otherwise hide in the next tick's argmax
+            # readback, attributed to nothing)
+            lg_re.block_until_ready()
             dt = time.perf_counter() - t0
             self.n_fwd += 1
-            sess.n_fwd += 1
-            sess.model_time += dt
+            for slot in slots:
+                sess = self.slots[slot]
+                sess.n_fwd += 1
+                sess.model_time += dt

@@ -27,6 +27,11 @@ class GenerationResult:
     model_time_s: float
     wall_time_s: float
     finished: bool
+    # portion of mask_time_s the scheduler hid under device execution
+    # (host builds step t+1's grammar mask while the device runs step t);
+    # mask_time_s - mask_overlap_s is what actually sat on the critical
+    # path
+    mask_overlap_s: float = 0.0
     # the checker reached a state with NO legal token (including EOS).
     # Output up to this point is a valid *prefix* but cannot be completed;
     # forcing EOS here would silently emit grammar-violating output.
@@ -58,6 +63,7 @@ class Session:
     n_prop: int = 0
     n_acc: int = 0
     mask_time: float = 0.0            # this request's checker time only
+    mask_overlap: float = 0.0         # ... of which hidden under device
     model_time: float = 0.0
     # lifecycle (done == result is not None)
     finished_eos: bool = False
@@ -78,6 +84,7 @@ class Session:
             n_spec_proposed=self.n_prop,
             n_spec_accepted=self.n_acc,
             mask_time_s=self.mask_time,
+            mask_overlap_s=self.mask_overlap,
             model_time_s=self.model_time,
             wall_time_s=self.t_finish - self.t_submit,
             finished=self.finished_eos,

@@ -7,18 +7,18 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import ModelConfig, SSMConfig
+from repro.configs.base import MLAConfig, ModelConfig, SSMConfig
 from repro.models import build_model
 
 BASE = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
             vocab_size=128, dtype="float32", max_seq_len=64)
 
 
-def _compare(cfg, steps=3, atol=2e-3):
+def _compare(cfg, steps=3, atol=2e-3, ragged=False, width=1):
     cfg_k = dataclasses.replace(cfg, use_pallas_kernels=True)
     m, mk = build_model(cfg), build_model(cfg_k)
     params = m.init(jax.random.PRNGKey(0))
-    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, 128,
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 18), 0, 128,
                               jnp.int32)
     # train/prefill path
     lg1, _ = m.train_logits(params, {"tokens": toks})
@@ -26,18 +26,56 @@ def _compare(cfg, steps=3, atol=2e-3):
     np.testing.assert_allclose(np.asarray(lg1), np.asarray(lg2), atol=atol,
                                rtol=1e-3)
     # decode path
-    c1, c2 = m.init_cache(2, 20), mk.init_cache(2, 20)
+    c1, c2 = m.init_cache(2, 32), mk.init_cache(2, 32)
     _, c1 = m.prefill(params, {"tokens": toks[:, :6]}, c1)
     _, c2 = mk.prefill(params, {"tokens": toks[:, :6]}, c2)
-    for i in range(6, 6 + steps):
-        d1, c1 = m.decode_step(params, c1, toks[:, i:i + 1])
-        d2, c2 = mk.decode_step(params, c2, toks[:, i:i + 1])
+    if ragged:
+        # per-row (B,) cache lengths, as the continuous-batching
+        # scheduler produces (row 1's tail entries are masked/rewritten)
+        c1["len"] = jnp.asarray([6, 4], jnp.int32)
+        c2["len"] = jnp.asarray([6, 4], jnp.int32)
+    i = 6
+    for _ in range(steps):
+        d1, c1 = m.decode_step(params, c1, toks[:, i:i + width])
+        d2, c2 = mk.decode_step(params, c2, toks[:, i:i + width])
         np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
                                    atol=atol, rtol=1e-3)
+        i += width
 
 
 def test_dense_decode_kernel():
     _compare(ModelConfig(arch_id="pk-dense", family="dense", **BASE))
+
+
+def test_dense_decode_kernel_ragged():
+    """Per-row cache lengths route through the ragged fused kernel (the
+    dense path is the oracle)."""
+    _compare(ModelConfig(arch_id="pk-dense-r", family="dense", **BASE),
+             ragged=True)
+
+
+def test_dense_decode_kernel_verify_window():
+    """(B, 1+s) speculative verify decode through the fused kernel, on
+    both uniform and ragged caches."""
+    _compare(ModelConfig(arch_id="pk-dense-w", family="dense", **BASE),
+             width=3)
+    _compare(ModelConfig(arch_id="pk-dense-wr", family="dense", **BASE),
+             ragged=True, width=3)
+
+
+MLA = MLAConfig(q_lora_rank=32, kv_lora_rank=16, qk_nope_head_dim=16,
+                qk_rope_head_dim=8, v_head_dim=16)
+
+
+def test_mla_decode_kernel():
+    """Absorbed-MLA latent reads through the fused kernel (Dk = r + dr
+    keys vs Dv = r values), uniform + ragged + verify window."""
+    cfg = ModelConfig(arch_id="pk-mla", family="dense", group=("mla",),
+                      mla=MLA, **BASE)
+    _compare(cfg)
+    _compare(dataclasses.replace(cfg, arch_id="pk-mla-r"), ragged=True)
+    _compare(dataclasses.replace(cfg, arch_id="pk-mla-w"), ragged=True,
+             width=3)
 
 
 def test_mamba1_kernel():

@@ -202,3 +202,190 @@ def test_dead_end_surfaced_not_silent(small_tokenizer):
     # batched path surfaces it too
     rb = eng.generate_batch(["a: "])[0]
     assert rb.dead_end and not rb.finished
+
+
+def test_batched_decode_routes_through_fused_kernel(small_tokenizer,
+                                                    json_grammar,
+                                                    monkeypatch):
+    """ISSUE 2 tentpole: with use_pallas_kernels the ragged batched decode
+    must hit kernels/decode_attention (no dense fallback), and outputs
+    must match the non-kernel scheduler token-for-token."""
+    import repro.kernels.decode_attention.ops as dec_ops
+
+    tok = small_tokenizer
+    cfg = ModelConfig(arch_id="s-attn-pk", family="dense",
+                      vocab_size=tok.vocab_size, use_pallas_kernels=True,
+                      **BASE)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    calls = {"n": 0, "ragged": 0}
+    real = dec_ops.decode_attention
+
+    def spy(q, k, v, lengths, **kw):
+        calls["n"] += 1
+        if getattr(lengths, "ndim", 0) == 1:
+            calls["ragged"] += 1
+        return real(q, k, v, lengths, **kw)
+
+    monkeypatch.setattr(dec_ops, "decode_attention", spy)
+    eng = ServingEngine(m, params, tok, json_grammar,
+                        EngineConfig(mode="domino", max_tokens=8),
+                        max_len=256)
+    batch = eng.generate_batch(PROMPTS[:2], max_batch=2)
+    assert calls["n"] > 0          # traced through the fused kernel
+    assert calls["ragged"] > 0     # ... on the per-row-length path
+    # parity vs the dense-fallback scheduler (same params, kernels off)
+    cfg0 = ModelConfig(arch_id="s-attn-nk", family="dense",
+                       vocab_size=tok.vocab_size, **BASE)
+    eng0 = ServingEngine(build_model(cfg0), params, tok, json_grammar,
+                         EngineConfig(mode="domino", max_tokens=8),
+                         max_len=256)
+    base = eng0.generate_batch(PROMPTS[:2], max_batch=2)
+    for r0, r1 in zip(base, batch):
+        assert r0.token_ids == r1.token_ids
+
+
+def test_prefill_bucketing_bounds_compiles(small_tokenizer, json_grammar):
+    """Satellite: admission prefills are padded to power-of-two buckets —
+    distinct prompt lengths collapse onto O(log max_len) shapes, and the
+    outputs stay token-for-token identical to unbucketed serving."""
+    tok = small_tokenizer
+    m, params = _build("attn", tok.vocab_size)
+    eng = ServingEngine(m, params, tok, json_grammar,
+                        EngineConfig(mode="domino", max_tokens=6),
+                        max_len=256)
+    widths = []
+    real_prefill = eng._prefill
+
+    def spy(params, inputs, cache):
+        widths.append(int(inputs["tokens"].shape[1]))
+        assert "length" in inputs     # true length rides along
+        return real_prefill(params, inputs, cache)
+
+    eng._prefill = spy
+    sched = ContinuousBatchingScheduler(eng, capacity=2)
+    prompts = ["a: ", "some much longer json prompt here: ",
+               "a medium prompt: ", "x: "]
+    sessions = [sched.submit(p) for p in prompts]
+    assert len({len(s.prompt_ids) for s in sessions}) >= 3
+    sched.run()
+    assert all(w & (w - 1) == 0 for w in widths)   # powers of two
+    assert len(set(widths)) < len({len(s.prompt_ids) for s in sessions}) + 1
+    # parity vs unbucketed admission
+    eng._prefill = real_prefill
+    plain = ContinuousBatchingScheduler(eng, capacity=2,
+                                        bucket_prefill=False)
+    sess0 = [plain.submit(p) for p in prompts]
+    plain.run()
+    for s_b, s_p in zip(sessions, sess0):
+        assert s_b.result.token_ids == s_p.result.token_ids
+
+
+def test_bucketing_skipped_on_refeed_archs(small_tokenizer, json_grammar):
+    """Ring/recurrent state must never see pad tokens: SSM admission
+    stays exact-length."""
+    tok = small_tokenizer
+    m, params = _build("ssm", tok.vocab_size)
+    eng = ServingEngine(m, params, tok, json_grammar,
+                        EngineConfig(mode="domino", max_tokens=4),
+                        max_len=256)
+    seen = []
+    real_prefill = eng._prefill
+
+    def spy(params, inputs, cache):
+        seen.append(inputs)
+        return real_prefill(params, inputs, cache)
+
+    eng._prefill = spy
+    eng.generate_batch(["some much longer json prompt here: "])
+    assert all("length" not in i for i in seen)
+
+
+def test_mask_overlap_accounting(small_tokenizer, json_grammar):
+    """ISSUE 2 tentpole: host mask construction for step t+1 runs while
+    the device executes step t.  The overlapped share is reported per
+    session and bounded by total mask time; outputs are unchanged."""
+    tok = small_tokenizer
+    m, params = _build("attn", tok.vocab_size)
+    eng = ServingEngine(m, params, tok, json_grammar,
+                        EngineConfig(mode="domino", max_tokens=10),
+                        max_len=256)
+    on = ContinuousBatchingScheduler(eng, capacity=2, overlap=True)
+    s_on = [on.submit(p) for p in PROMPTS]
+    on.run()
+    off = ContinuousBatchingScheduler(eng, capacity=2, overlap=False)
+    s_off = [off.submit(p) for p in PROMPTS]
+    off.run()
+    for a, b in zip(s_on, s_off):
+        assert a.result.token_ids == b.result.token_ids
+    # the pipeline actually served selections from prebuilt masks...
+    assert on.premask_hits > 0
+    assert off.premask_hits == 0
+    # ...and the overlap credit (granted only when the device provably
+    # outlasted the build) stays within total mask time
+    for s in s_on:
+        assert s.result.mask_overlap_s <= s.result.mask_time_s + 1e-9
+    assert all(s.result.mask_overlap_s == 0.0 for s in s_off)
+
+
+def test_gather_scatter_rows_roundtrip(small_tokenizer):
+    """Grouped refeed surgery: gathering rows [2, 0] into a B=2 ragged
+    cache and scattering them back is the identity."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.serving.scheduler import _gather_rows, _scatter_rows
+
+    tok = small_tokenizer
+    m, params = _build("swa", tok.vocab_size)
+    cache = m.init_cache(4, 64)
+    cache["len"] = jnp.asarray([5, 3, 9, 0], jnp.int32)
+    leaves = jax.tree_util.tree_leaves(cache)
+    cache = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(cache),
+        [l + (i + 1) for i, l in enumerate(leaves)])
+    idx = jnp.asarray([2, 0], jnp.int32)
+    rows = _gather_rows(cache, idx)
+    assert rows["len"].shape == (2,)     # stays ragged for the refeed
+    back = _scatter_rows(cache, rows, idx)
+    for a, b in zip(jax.tree_util.tree_leaves(back),
+                    jax.tree_util.tree_leaves(cache)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_scheduler_speculative_matches_plain_swa(small_tokenizer):
+    """Grouped refeed on a ring-buffer arch: batched speculation remains
+    output-invariant (exercises the K>1 gather/decode/scatter path)."""
+    tok = small_tokenizer
+    m, params = _build("swa", tok.vocab_size)
+    g = grammars.load("json_gsm8k")
+    prompts = ["A: ", "Q: compute 1 + 2\nA: ", "A: [", ]
+    plain = ServingEngine(m, params, tok, g,
+                          EngineConfig(mode="domino", max_tokens=12),
+                          max_len=256)
+    base = plain.generate_batch(prompts)
+    spec = ServingEngine(m, params, tok, g,
+                         EngineConfig(mode="domino", speculative=True,
+                                      spec_s=4, spec_threshold=0.4,
+                                      max_tokens=12), max_len=256)
+    assert spec._needs_refeed
+    spec.generate(prompts[0])           # warm the shared count model
+    batch = spec.generate_batch(prompts)
+    for b0, b1 in zip(base, batch):
+        assert b0.token_ids == b1.token_ids
+
+
+def test_vacant_slot_lengths_pinned_to_zero(small_tokenizer, json_grammar):
+    """Freed slots must not keep accumulating ragged cache length — the
+    fused kernel's early-exit depends on vacant rows staying at len 0."""
+    import numpy as np
+
+    tok = small_tokenizer
+    m, params = _build("attn", tok.vocab_size)
+    eng = ServingEngine(m, params, tok, json_grammar,
+                        EngineConfig(mode="domino", max_tokens=6),
+                        max_len=256)
+    sched = ContinuousBatchingScheduler(eng, capacity=3)
+    sched.submit("a: ")                 # 2 slots stay vacant throughout
+    sched.run()
+    assert np.all(np.asarray(sched.cache["len"]) == 0)
