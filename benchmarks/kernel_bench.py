@@ -9,11 +9,17 @@ by fusion (the TPU-relevant derived quantity):
  - ragged flash-decode: the dense fallback streams the full B x T cache
    every step, the ragged kernel streams only each row's
    ceil((len_b + S - 1)/BLOCK_T) live tiles — on a continuous batch with
-   mixed progress that is the dominant decode-step byte saving.
+   mixed progress that is the dominant decode-step byte saving;
+ - paged decode (page_size sweep): the same ragged read through a shared
+   page pool + per-row block tables (BLOCK_T == page_size).  Streamed
+   bytes shrink further as pages get smaller (less last-tile padding),
+   at the cost of more, smaller DMAs — the sweep records both sides of
+   that trade per page size, with paged-vs-dense parity asserted at
+   every point.
 
 Running this module as a script doubles as the CI interpret-mode smoke
-(kernel-vs-oracle parity on the ragged + verify-window layouts) and
-writes a ``BENCH_decode.json`` artifact so the perf trajectory is
+(kernel-vs-oracle parity on the ragged + verify-window + paged layouts)
+and writes a ``BENCH_decode.json`` artifact so the perf trajectory is
 tracked across PRs.
 """
 from __future__ import annotations
@@ -106,11 +112,87 @@ def run_decode(verbose: bool = True,
         emit(f"kernel_decode_attention_s{s_win}", 1e6 * dt,
              f"dense_bytes={dense};fused_bytes={fused};"
              f"ratio={dense/fused:.3f};err={err:.2e}")
+    record["paged_sweep"] = run_paged_sweep(verbose=verbose)
     pathlib.Path(json_path).write_text(json.dumps(record, indent=2))
     if verbose:
         print(f"  [kernel] wrote {json_path}", flush=True)
     return {("decode", int(name[1:])): c
             for name, c in record["cases"].items()}
+
+
+def run_paged_sweep(verbose: bool = True):
+    """Page-size sweep for the paged (block-table) decode read.
+
+    For each page_size the same mixed-progress batch is laid out as a
+    shuffled page pool; the paged kernel must match the dense kernel on
+    the gathered view EXACTLY (identical tile order and accumulation) and
+    the jnp oracle to float tolerance.  Recorded per point: max abs error
+    vs both references, the streamed-bytes ratio vs the dense fallback,
+    and the DMA (tile) count — the page-size trade on TPU is fewer
+    padding bytes per row frontier vs more, smaller asynchronous copies.
+    """
+    from repro.kernels.decode_attention.ops import decode_attention
+    from repro.kernels.decode_attention.ref import (decode_attention_ref,
+                                                    gather_pages)
+
+    rng = np.random.default_rng(2)
+    b, g, qh, d, t = 4, 2, 4, 64, 2048
+    lens = np.asarray([2048, 96, 512, 1200], np.int32)
+    sweep = {}
+    for ps in (16, 32, 64, 128):
+        mp = t // ps
+        n_pages = 1 + int(np.ceil(lens / ps).sum())
+        pool_k = jnp.asarray(
+            rng.normal(size=(n_pages, ps, g, d)).astype(np.float32))
+        pool_v = jnp.asarray(
+            rng.normal(size=(n_pages, ps, g, d)).astype(np.float32))
+        # deliberately non-contiguous page assignment
+        perm = list(rng.permutation(np.arange(1, n_pages)))
+        tbl = np.zeros((b, mp), np.int32)
+        for i, ln in enumerate(lens):
+            n_pg = int(np.ceil(ln / ps))
+            tbl[i, :n_pg] = perm[:n_pg]
+            del perm[:n_pg]
+        tbl = jnp.asarray(tbl)
+        entry = {}
+        for s_win in (1, 5):
+            q = jnp.asarray(
+                rng.normal(size=(b, s_win, g, qh, d)).astype(np.float32))
+            ln = jnp.asarray(lens)
+            o_paged = decode_attention(q, pool_k, pool_v, ln,
+                                       block_tables=tbl)
+            o_dense = decode_attention(q, gather_pages(pool_k, tbl),
+                                       gather_pages(pool_v, tbl), ln,
+                                       block_t=ps)
+            err_dense = float(jnp.max(jnp.abs(o_paged - o_dense)))
+            assert err_dense == 0.0, \
+                f"paged kernel != dense kernel at ps={ps}: {err_dense}"
+            o_ref = decode_attention_ref(q, pool_k, pool_v, ln,
+                                         block_tables=tbl)
+            err = float(jnp.max(jnp.abs(o_paged - o_ref)))
+            assert err < 1e-3, \
+                f"paged kernel diverged from oracle at ps={ps}: {err}"
+            tiles = int(np.ceil(np.minimum(lens + s_win - 1, t) / ps).sum())
+            fused = tiles * ps * g * d * 2 * 4
+            dense = b * t * g * d * 2 * 4
+            entry[f"S{s_win}"] = {
+                "max_abs_err": err, "err_vs_dense_kernel": err_dense,
+                "tiles": tiles, "fused_bytes": fused,
+                "bytes_ratio": dense / fused}
+        entry["pool_pages"] = n_pages
+        sweep[f"ps{ps}"] = entry
+        if verbose:
+            e1 = entry["S1"]
+            print(f"  [kernel] paged decode ps={ps:4d}: "
+                  f"{e1['tiles']} tiles/step, "
+                  f"{e1['bytes_ratio']:.2f}x fewer bytes vs dense, "
+                  f"err={e1['max_abs_err']:.1e} "
+                  f"(== dense kernel: "
+                  f"{e1['err_vs_dense_kernel'] == 0.0})", flush=True)
+        emit(f"kernel_decode_paged_ps{ps}", entry["S1"]["tiles"],
+             f"ratio={entry['S1']['bytes_ratio']:.3f};"
+             f"err={entry['S1']['max_abs_err']:.2e}")
+    return sweep
 
 
 if __name__ == "__main__":

@@ -18,19 +18,31 @@ broadcasts): query position s of row b attends keys t < lengths[b] + s,
 i.e. ``lengths`` counts the keys visible to the *first* window position
 and later positions extend causally one key at a time.
 
+Paged caches: with ``block_tables`` (B, max_pages) int32, K/V are POOLS
+(n_pages, page_size, G, D) shared across rows and BLOCK_T == page_size —
+cache tile j of row b lives at pool row ``block_tables[b, j]``, so each
+grid step gathers one page from a (generally non-contiguous) pool row
+instead of slicing a contiguous stripe.  The tile's *logical* positions
+are still j*BLOCK_T.., so the in-tile validity mask and the per-row
+frontier early-exit are unchanged; only the HBM addresses move.  Both
+scalar operands ride the scalar-prefetch channel, which is what lets the
+pipeline compute the next DMA's source address from the table before the
+tile is needed.
+
 Grid (B, G, T/BLOCK_T) — the T axis is minor, so VMEM scratch (m, l, acc)
 carries across cache tiles of one (batch, group).  Raggedness is handled
 twice over:
   * ``pl.when(j * BLOCK_T < lengths[b] + S - 1)`` skips compute on tiles
     fully beyond the row's frontier, and
-  * the K/V index maps clamp the tile index to the row's last live tile,
-    so the pipeline re-addresses the same block and elides the HBM copy —
+  * the K/V index maps clamp the tile index to the row's last live tile
+    (then translate it through the block table when paged), so the
+    pipeline re-addresses the same block and elides the HBM copy —
     row b moves ceil((lengths[b]+S-1)/BLOCK_T) tiles, not T/BLOCK_T.
 
 VMEM working set per step: BLOCK_T*(Dk+Dv) halves of K/V + S*Qh*(Dv+2)
 f32 accumulators — with Dk=Dv=128, BLOCK_T=512, S*Qh<=32: ~600 KiB,
-comfortably inside the ~16 MiB VMEM budget; BLOCK_T is the §Perf tuning
-knob.
+comfortably inside the ~16 MiB VMEM budget; BLOCK_T (== page_size when
+paged) is the §Perf tuning knob.
 """
 from __future__ import annotations
 
@@ -44,9 +56,12 @@ from jax.experimental.pallas import tpu as pltpu
 NEG = -1e30
 
 
-def _kernel(len_ref, q_ref, k_ref, v_ref, *rest,
+def _kernel(len_ref, *rest,
             block_t: int, n_blocks: int, s_win: int, qh: int, scale: float,
-            split_k: bool):
+            split_k: bool, paged: bool):
+    if paged:                               # block table rides the scalar
+        rest = rest[1:]                     # channel; index maps consume it
+    q_ref, k_ref, v_ref, *rest = rest
     if split_k:                             # second (q2, k2) score operand
         q2_ref, k2_ref, o_ref, m_scr, l_scr, acc_scr = rest
     else:
@@ -108,7 +123,9 @@ def decode_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                             interpret: bool = True,
                             scale: float | None = None,
                             q2: jnp.ndarray | None = None,
-                            k2: jnp.ndarray | None = None) -> jnp.ndarray:
+                            k2: jnp.ndarray | None = None,
+                            block_tables: jnp.ndarray | None = None
+                            ) -> jnp.ndarray:
     """q (B,S,G,Qh,Dk); k (B,T,G,Dk); v (B,T,G,Dv); lengths (B,) int32
     (scalar broadcasts) -> (B,S,G,Qh,Dv).  Window pos s of row b attends
     keys t < lengths[b] + s.
@@ -116,13 +133,27 @@ def decode_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     Optional split scores: with q2 (B,S,G,Qh,D2) / k2 (B,T,G,D2) the tile
     score is (q.k^T + q2.k2^T) * scale.  Absorbed MLA uses this to run
     the latent (c_kv) and rope (k_rope) caches as-is — no per-step O(T)
-    key concatenation on the host side."""
+    key concatenation on the host side.
+
+    Paged: with ``block_tables`` (B, max_pages) int32, k/v (and k2) are
+    pools (n_pages, page_size, G, D); BLOCK_T is forced to page_size and
+    tile j of row b streams pool row block_tables[b, j].  Negative /
+    vacant table entries are clamped to pool row 0 (the reserved trash
+    page) — such tiles are always beyond the row's frontier, so their
+    contents never reach the accumulator.
+    """
     b, s_win, g, qh, dk = q.shape
-    t = k.shape[1]
     dv = v.shape[-1]
-    if t % block_t != 0:
-        block_t = t
-    n_blocks = t // block_t
+    paged = block_tables is not None
+    if paged:
+        block_t = k.shape[1]               # BLOCK_T == page_size
+        n_blocks = block_tables.shape[1]
+        block_tables = jnp.asarray(block_tables, jnp.int32)
+    else:
+        t = k.shape[1]
+        if t % block_t != 0:
+            block_t = t
+        n_blocks = t // block_t
     if scale is None:
         scale = 1.0 / (dk ** 0.5)
     lengths = jnp.broadcast_to(
@@ -130,13 +161,20 @@ def decode_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     split_k = q2 is not None
     kernel = functools.partial(_kernel, block_t=block_t, n_blocks=n_blocks,
                                s_win=s_win, qh=qh, scale=scale,
-                               split_k=split_k)
+                               split_k=split_k, paged=paged)
 
-    def kv_map(i, h, j, len_ref):
+    def last_live(i, len_ref):
         # clamp to the row's last live tile: once past the frontier the
         # block index stops changing and the pipeline skips the HBM copy
-        last = jnp.maximum(len_ref[i] + s_win - 2, 0) // block_t
-        return (i, jnp.minimum(j, last), h, 0)
+        return jnp.maximum(len_ref[i] + s_win - 2, 0) // block_t
+
+    if paged:
+        def kv_map(i, h, j, len_ref, tbl_ref):
+            page = jnp.minimum(j, last_live(i, len_ref))
+            return (jnp.maximum(tbl_ref[i, page], 0), 0, h, 0)
+    else:
+        def kv_map(i, h, j, len_ref):
+            return (i, jnp.minimum(j, last_live(i, len_ref)), h, 0)
 
     def q_map(i, h, j, *_):
         return (i, 0, h, 0, 0)
@@ -146,14 +184,14 @@ def decode_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         pl.BlockSpec((1, block_t, 1, dk), kv_map),
         pl.BlockSpec((1, block_t, 1, dv), kv_map),
     ]
-    operands = [lengths, q, k, v]
+    operands = [lengths] + ([block_tables] if paged else []) + [q, k, v]
     if split_k:
         d2 = q2.shape[-1]
         in_specs += [pl.BlockSpec((1, s_win, 1, qh, d2), q_map),
                      pl.BlockSpec((1, block_t, 1, d2), kv_map)]
         operands += [q2, k2]
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2 if paged else 1,
         grid=(b, g, n_blocks),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, s_win, 1, qh, dv), q_map),

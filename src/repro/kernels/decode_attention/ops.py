@@ -8,7 +8,8 @@ from repro.kernels.decode_attention.ref import decode_attention_ref
 
 
 def decode_attention(q, k, v, lengths, use_ref: bool = False,
-                     block_t: int = 512, scale=None, q2=None, k2=None):
+                     block_t: int = 512, scale=None, q2=None, k2=None,
+                     block_tables=None):
     """q (B,S,G,Qh,Dk) — or (B,G,Qh,Dk), read as S=1; k (B,T,G,Dk);
     v (B,T,G,Dv); lengths () or (B,) int32 -> matching q's rank.
 
@@ -16,10 +17,16 @@ def decode_attention(q, k, v, lengths, use_ref: bool = False,
     window position s of row b attends keys t < lengths[b] + s.
     Optional (q2, k2) adds a second score term (absorbed-MLA latent+rope
     split): score = (q.k^T + q2.k2^T) * scale.
+
+    Paged caches: with ``block_tables`` (B, max_pages) int32, k/v (and
+    k2) are shared pools (n_pages, page_size, G, D) and row b's cache
+    tile j streams from pool row block_tables[b, j] (BLOCK_T is the page
+    size; ``block_t`` is ignored).
     """
     if use_ref:
         return decode_attention_ref(q, k, v, lengths, scale=scale,
-                                    q2=q2, k2=k2)
+                                    q2=q2, k2=k2,
+                                    block_tables=block_tables)
     squeeze = q.ndim == 4
     if squeeze:
         q = q[:, None]
@@ -27,5 +34,5 @@ def decode_attention(q, k, v, lengths, use_ref: bool = False,
     on_tpu = jax.default_backend() == "tpu"
     out = decode_attention_pallas(q, k, v, lengths, block_t=block_t,
                                   interpret=not on_tpu, scale=scale,
-                                  q2=q2, k2=k2)
+                                  q2=q2, k2=k2, block_tables=block_tables)
     return out[:, 0] if squeeze else out

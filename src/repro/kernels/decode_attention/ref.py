@@ -4,7 +4,20 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
-def decode_attention_ref(q, k, v, lengths, scale=None, q2=None, k2=None):
+def gather_pages(pool: jnp.ndarray, block_tables: jnp.ndarray) -> jnp.ndarray:
+    """Materialize a paged pool as its dense per-row equivalent.
+
+    pool (n_pages, page_size, ...) + block_tables (B, max_pages) ->
+    (B, max_pages * page_size, ...).  Vacant (< 0) table entries clamp to
+    pool row 0 (the trash page); the positions they cover are beyond the
+    owning row's frontier, so the validity mask hides whatever they hold.
+    """
+    g = pool[jnp.maximum(block_tables, 0)]       # (B, MP, ps, ...)
+    return g.reshape((g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:])
+
+
+def decode_attention_ref(q, k, v, lengths, scale=None, q2=None, k2=None,
+                         block_tables=None):
     """q (B,S,G,Qh,Dk) — or (B,G,Qh,Dk), read as S=1; k (B,T,G,Dk);
     v (B,T,G,Dv); lengths () or (B,) int32 -> (B,S,G,Qh,Dv).
 
@@ -13,7 +26,16 @@ def decode_attention_ref(q, k, v, lengths, scale=None, q2=None, k2=None):
     key produce zeros, matching the kernel's early-exit convention.
     Optional split scores (q2, k2): score = (q.k^T + q2.k2^T) * scale,
     the absorbed-MLA latent+rope decomposition.
+
+    With ``block_tables`` (B, max_pages), k/v (and k2) are paged pools
+    (n_pages, page_size, G, D): the oracle gathers each row's pages into
+    the dense stripe they stand for, then proceeds identically — paged
+    attention IS dense attention over the gathered view.
     """
+    if block_tables is not None:
+        k = gather_pages(k, block_tables)
+        v = gather_pages(v, block_tables)
+        k2 = None if k2 is None else gather_pages(k2, block_tables)
     squeeze = q.ndim == 4
     if squeeze:
         q = q[:, None]

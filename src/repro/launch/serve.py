@@ -26,6 +26,16 @@ def main() -> None:
     ap.add_argument("--kernels", action="store_true",
                     help="route decode through the fused Pallas kernels "
                          "(ragged flash-decode; interpret mode off-TPU)")
+    ap.add_argument("--page-size", type=int, default=64,
+                    help="paged-KV pool page length in tokens (pageable "
+                         "archs only; the fused kernel's BLOCK_T)")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="paged-KV pool size in pages (default: "
+                         "capacity-equivalent slots*max_len/page_size; "
+                         "smaller pools trade admission backpressure for "
+                         "HBM)")
+    ap.add_argument("--no-paged", action="store_true",
+                    help="force contiguous per-slot KV stripes")
     ap.add_argument("--checkpoint", default=None)
     args = ap.parse_args()
 
@@ -76,10 +86,15 @@ def main() -> None:
                "Data record: "][:args.prompts]
     if len(prompts) > 1:
         # continuous batching covers every arch (SSM/SWA rows are admitted
-        # by exact-length prefill; speculation refeeds per row)
+        # by exact-length prefill; speculation refeeds per row); pure
+        # full-attention/MLA stacks serve from a paged KV pool
         print(f"[continuous batching: {len(prompts)} requests, "
-              f"{min(len(prompts), args.slots)} slots]")
-        results = engine.generate_batch(prompts, max_batch=args.slots)
+              f"{min(len(prompts), args.slots)} slots, "
+              f"{'contiguous KV' if args.no_paged else 'paged KV'}]")
+        results = engine.generate_batch(
+            prompts, max_batch=args.slots,
+            paged=False if args.no_paged else None,
+            page_size=args.page_size, n_pages=args.pool_pages)
     else:
         results = [engine.generate(p) for p in prompts]
     for p, r in zip(prompts, results):

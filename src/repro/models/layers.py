@@ -264,7 +264,9 @@ def mla_apply_absorbed(params: Params, cfg: ModelConfig, x: jnp.ndarray,
                        latent: Tuple[jnp.ndarray, jnp.ndarray],
                        k_pos: jnp.ndarray,
                        k_valid: Optional[jnp.ndarray] = None,
-                       lengths: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+                       lengths: Optional[jnp.ndarray] = None,
+                       block_tables: Optional[jnp.ndarray] = None
+                       ) -> jnp.ndarray:
     """Absorbed MLA decode (DeepSeek-V3): W_uk folds into the query and
     W_uv into the output, so attention runs directly against the compressed
     (B,T,r) latent — the whole point of MLA's small cache.  Never
@@ -276,7 +278,8 @@ def mla_apply_absorbed(params: Params, cfg: ModelConfig, x: jnp.ndarray,
     terms and whose values are the latent itself (Dv = r) — the cache
     buffers stream tile-by-tile exactly as stored, no per-step O(T) key
     concatenation; same per-row lengths / causal window semantics as the
-    GQA path.
+    GQA path.  With ``block_tables`` the latent/rope operands are paged
+    pools (n_pages, ps, ...) streamed through each row's table.
     """
     m = cfg.mla
     nq = cfg.n_heads
@@ -296,7 +299,8 @@ def mla_apply_absorbed(params: Params, cfg: ModelConfig, x: jnp.ndarray,
         ctx_lat = decode_attention(
             q_lat[:, :, None], c_kv[:, :, None], c_kv[:, :, None],
             lengths, scale=scale,
-            q2=q_rope[:, :, None], k2=k_rope)[:, :, 0]
+            q2=q_rope[:, :, None], k2=k_rope,
+            block_tables=block_tables)[:, :, 0]
         ctx_lat = ctx_lat.astype(x.dtype)                  # (B,S,H,r)
     else:
         scores = (jnp.einsum("bshr,btr->bhst", q_lat, c_kv)

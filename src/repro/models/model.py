@@ -153,11 +153,20 @@ class Model:
 
     # -- serve ----------------------------------------------------------------------
 
-    def init_cache(self, batch: int, max_len: int):
-        return kvcache.init_cache(self.cfg, batch, max_len)
+    def init_cache(self, batch: int, max_len: int, page_size=None,
+                   n_pages=None):
+        """Dense per-row cache by default; with ``page_size`` (pageable
+        architectures only) the full-attention/MLA stripes become a
+        shared page pool + (B, max_pages) block table (``pages``).
+        Paged caches are decode-only: admission prefills a dense B=1 row
+        and scatters it into the row's allocated pages."""
+        return kvcache.init_cache(self.cfg, batch, max_len,
+                                  page_size=page_size, n_pages=n_pages)
 
-    def cache_spec(self, batch: int, max_len: int):
-        return kvcache.cache_spec(self.cfg, batch, max_len)
+    def cache_spec(self, batch: int, max_len: int, page_size=None,
+                   n_pages=None):
+        return kvcache.cache_spec(self.cfg, batch, max_len,
+                                  page_size=page_size, n_pages=n_pages)
 
     def prefill(self, params: Params, inputs: Dict[str, jnp.ndarray],
                 cache) -> Tuple[jnp.ndarray, Any]:
@@ -200,7 +209,8 @@ class Model:
         base = ln[:, None] if ln.ndim == 1 else ln   # (B,) ragged batch
         pos = base + jnp.broadcast_to(
             jnp.arange(s, dtype=jnp.int32), (b, s))
-        ctx = Ctx(mode="decode", q_pos=pos, cache_len=ln)
+        ctx = Ctx(mode="decode", q_pos=pos, cache_len=ln,
+                  pages=cache.get("pages"))
         x, _, new_cache = stack_apply(params["stack"], self.cfg, x, ctx, cache)
         new_cache["len"] = cache["len"] + s
         return self._head(params, x), new_cache

@@ -44,10 +44,18 @@ class Ctx:
     cache_len: Optional[jnp.ndarray] = None   # scalar int32, or (B,) for
     max_len: int = 0                          # per-request batched serving
     enc_out: Optional[jnp.ndarray] = None     # (B, T_enc, D) for xattn
+    # paged KV serving: (B, max_pages) int32 block table — position p of
+    # row b lives at pool row pages[b, p // ps], offset p % ps, where ps
+    # is the (static) second axis of the pool leaves
+    pages: Optional[jnp.ndarray] = None
 
     @property
     def ragged(self) -> bool:
         return self.cache_len is not None and self.cache_len.ndim == 1
+
+    @property
+    def paged(self) -> bool:
+        return self.pages is not None
 
 
 # ---------------------------------------------------------------------------
@@ -125,17 +133,25 @@ def _self_attention(p: Params, cfg: ModelConfig, xn: jnp.ndarray, ctx: Ctx,
     else:  # decode
         if window is None:
             new_cache = _write_kv(cache, cfg, k_new, v_new, ctx, window)
-            t = new_cache["k"].shape[1]
             k_all, v_all = _read_kv(new_cache, xn.dtype)
             if cfg.use_pallas_kernels:
                 # fused ragged flash-decode: q (B,S,G,Qh,D) vs cache
-                # (B,T,G,D); per-row lengths and the S>1 speculative
-                # verify window (causal offsets) are handled in-kernel,
-                # so the batched serving path never takes the dense read
+                # (B,T,G,D) — or the (n_pages,ps,G,D) pool streamed
+                # through the block table when paged; per-row lengths and
+                # the S>1 speculative verify window (causal offsets) are
+                # handled in-kernel, so the batched serving path never
+                # takes the dense read
                 from repro.kernels.decode_attention.ops import \
                     decode_attention
-                out = decode_attention(qg, k_all, v_all, ctx.cache_len + 1)
+                out = decode_attention(qg, k_all, v_all, ctx.cache_len + 1,
+                                       block_tables=ctx.pages)
             else:
+                if ctx.paged:
+                    from repro.kernels.decode_attention.ref import \
+                        gather_pages
+                    k_all = gather_pages(k_all, ctx.pages)
+                    v_all = gather_pages(v_all, ctx.pages)
+                t = k_all.shape[1]
                 k_pos = jnp.broadcast_to(
                     jnp.arange(t, dtype=jnp.int32), (b, t))
                 lim = (ctx.cache_len[:, None] if ctx.ragged
@@ -173,6 +189,26 @@ def _dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
             * scale.astype(jnp.float32)[..., None]).astype(dtype)
 
 
+def _page_translate(ctx: Ctx, b: int, s: int, page_size: int):
+    """(pool row, in-page offset) index pair, both (B, S), for the S new
+    tokens each row writes at positions cache_len[b]..cache_len[b]+S-1.
+    Vacant table entries (<= 0) AND positions past the table's capacity
+    resolve to pool row 0, the reserved trash page: padded rows of a
+    batched decode and writes beyond max_len land somewhere harmless
+    (the dense layout's equivalent is the scatter dropping OOB indices —
+    clamping to the last table column would corrupt the row's newest
+    live page instead)."""
+    ln = ctx.cache_len
+    ln_b = ln[:, None] if ctx.ragged else jnp.full((b, 1), ln, jnp.int32)
+    pos = ln_b + jnp.arange(s, dtype=jnp.int32)[None, :]        # (B, S)
+    tbl = jnp.maximum(ctx.pages, 0)                             # (B, MP)
+    pidx = pos // page_size
+    prow = jnp.take_along_axis(
+        tbl, jnp.minimum(pidx, tbl.shape[1] - 1), axis=1)
+    prow = jnp.where(pidx >= tbl.shape[1], 0, prow)
+    return prow, pos % page_size
+
+
 def _write_kv(cache: Params, cfg: ModelConfig, k: jnp.ndarray,
               v: jnp.ndarray, ctx: Ctx, window: Optional[int]) -> Params:
     b, s = k.shape[:2]
@@ -181,6 +217,18 @@ def _write_kv(cache: Params, cfg: ModelConfig, k: jnp.ndarray,
     if quant:
         k, k_sc = _quantize_kv(k)
         v, v_sc = _quantize_kv(v)
+    if ctx.paged and window is None:
+        # paged pool: scatter each row's S new tokens through its block
+        # table (rows own disjoint pages, so index pairs never collide
+        # across live rows)
+        prow, poff = _page_translate(ctx, b, s, cache["k"].shape[1])
+        out = dict(cache)
+        out["k"] = cache["k"].at[prow, poff].set(k)
+        out["v"] = cache["v"].at[prow, poff].set(v)
+        if quant:
+            out["k_scale"] = cache["k_scale"].at[prow, poff].set(k_sc)
+            out["v_scale"] = cache["v_scale"].at[prow, poff].set(v_sc)
+        return out
     if window is None or "pos" not in cache:
         out = dict(cache)
         if ctx.ragged:
@@ -265,7 +313,12 @@ def _mla_attention(p: Params, cfg: ModelConfig, xn: jnp.ndarray, ctx: Ctx,
             cache["krope"], k_rope, (0, ctx.cache_len, 0, 0))
     else:
         new_cache = dict(cache)
-        if ctx.ragged:
+        if ctx.paged:
+            # paged latent pool: scatter through the block table
+            prow, poff = _page_translate(ctx, b, s, cache["ckv"].shape[1])
+            new_cache["ckv"] = cache["ckv"].at[prow, poff].set(c_kv)
+            new_cache["krope"] = cache["krope"].at[prow, poff].set(k_rope)
+        elif ctx.ragged:
             rows = jnp.arange(b, dtype=jnp.int32)[:, None]
             idx = ctx.cache_len[:, None] + \
                 jnp.arange(s, dtype=jnp.int32)[None, :]
@@ -276,21 +329,27 @@ def _mla_attention(p: Params, cfg: ModelConfig, xn: jnp.ndarray, ctx: Ctx,
                 cache["ckv"], c_kv, (0, ctx.cache_len, 0))
             new_cache["krope"] = jax.lax.dynamic_update_slice(
                 cache["krope"], k_rope, (0, ctx.cache_len, 0, 0))
-        t = new_cache["ckv"].shape[1]
         if cfg.use_pallas_kernels:
-            # fused ragged latent read (per-row lengths, causal window)
+            # fused ragged latent read (per-row lengths, causal window;
+            # paged pools stream through the block table)
             out = mla_apply_absorbed(p, cfg, xn, ctx.q_pos,
                                      (new_cache["ckv"], new_cache["krope"]),
                                      None, None,
-                                     lengths=ctx.cache_len + 1)
+                                     lengths=ctx.cache_len + 1,
+                                     block_tables=ctx.pages)
         else:
+            ckv_r, krope_r = new_cache["ckv"], new_cache["krope"]
+            if ctx.paged:
+                from repro.kernels.decode_attention.ref import gather_pages
+                ckv_r = gather_pages(ckv_r, ctx.pages)
+                krope_r = gather_pages(krope_r, ctx.pages)
+            t = ckv_r.shape[1]
             k_pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
             lim = (ctx.cache_len[:, None] if ctx.ragged
                    else ctx.cache_len) + s
             k_valid = k_pos < lim
             out = mla_apply_absorbed(p, cfg, xn, ctx.q_pos,
-                                     (new_cache["ckv"],
-                                      new_cache["krope"]),
+                                     (ckv_r, krope_r),
                                      k_pos, k_valid)
     return out, new_cache
 

@@ -353,7 +353,10 @@ class ServingEngine:
     # -- batched serving -------------------------------------------------------------
 
     def generate_batch(self, prompts: List[str],
-                       max_batch: Optional[int] = None
+                       max_batch: Optional[int] = None,
+                       paged: Optional[bool] = None,
+                       page_size: Optional[int] = None,
+                       n_pages: Optional[int] = None
                        ) -> List[GenerationResult]:
         """Serve ``prompts`` through the continuous-batching scheduler.
 
@@ -361,12 +364,22 @@ class ServingEngine:
         the admission queue and reuse slots as earlier requests finish.
         All architectures are supported: recurrent/ring rows are admitted
         by exact-length prefill and speculation uses per-row refeed.
+        On pure full-attention/MLA stacks the KV cache is paged by
+        default (``paged``/``page_size``/``n_pages`` size the pool; an
+        undersized pool exerts admission backpressure instead of OOM).
         Call :meth:`precompute` first to keep tree construction off the
         serving critical path.
         """
         from repro.serving.scheduler import ContinuousBatchingScheduler
         cap = min(len(prompts), max_batch) if max_batch else len(prompts)
-        sched = ContinuousBatchingScheduler(self, capacity=cap)
+        kwargs = {}
+        if paged is not None:
+            kwargs["paged"] = paged
+        if page_size is not None:
+            kwargs["page_size"] = page_size
+        if n_pages is not None:
+            kwargs["n_pages"] = n_pages
+        sched = ContinuousBatchingScheduler(self, capacity=cap, **kwargs)
         sessions = [sched.submit(p) for p in prompts]
         sched.run()
         return [s.result for s in sessions]

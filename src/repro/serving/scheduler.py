@@ -1,4 +1,4 @@
-"""Continuous-batching constrained scheduler.
+"""Continuous-batching constrained scheduler over a paged KV pool.
 
 Replaces the old lockstep ``generate_batch``: a fixed-capacity decode batch
 whose rows (KV "slots") are admitted and evicted independently.  Finished
@@ -21,13 +21,31 @@ Design points (ISSUE 1 tentpole):
  - the forward is dispatched asynchronously and the host builds the NEXT
    step's grammar masks while the device executes (ISSUE 2 tentpole):
    mask_time moves off the step critical path — it still accrues
-   per-session, with the hidden portion reported as ``mask_overlap_s``;
+   per-session, with the hidden portion reported as ``mask_overlap_s``.
+   Under ``opportunistic`` checking the prebuild is adaptive: it is
+   skipped for slots whose previous tick's raw argmax passed the O(token)
+   legality check (the mask would go unread), and resumes the tick after
+   an intervention;
+ - paged KV (ISSUE 3 tentpole): on pageable architectures (pure
+   full-attention / MLA stacks) the slots do NOT own contiguous
+   ``max_len`` cache stripes.  The cache is a shared pool of
+   ``page_size``-token pages plus an (B, max_pages) block table per slot
+   (models/kvcache.py); a host-side free-list allocator hands pages out
+   at admission (``ceil((prompt+1)/page_size)`` — not a full-length
+   stripe), grows rows page-by-page as they decode, shrinks them when
+   speculative rollback rewinds the frontier, and frees them the moment
+   a request finishes.  Admission blocks on pool exhaustion (the waiting
+   queue provides backpressure), and mid-flight exhaustion falls back to
+   vLLM-style recompute preemption: the youngest resident row returns
+   its pages and re-enters the queue front, to be re-prefilled
+   (prompt + generated prefix) when pages free up — the checker state
+   rides along, so outputs are unchanged;
  - speculative decoding (paper §3.6) runs per-row: one (B, 1+s) decode
    verifies every row's proposal chain; rows on full-attention/MLA archs
-   roll their per-row cache length back, rows on SSM/SWA archs re-feed
-   their accepted tokens from the pre-speculation cache — grouped by
-   accepted length, so each group is one gather/decode/scatter round
-   instead of a B=1 decode per row;
+   roll their per-row cache length back (returning now-empty pages),
+   rows on SSM/SWA archs re-feed their accepted tokens from the
+   pre-speculation cache — grouped by accepted length, so each group is
+   one gather/decode/scatter round instead of a B=1 decode per row;
  - all sessions share the engine's TreeCache (and count model); call
    ``warm()`` to run the offline ``precompute()`` pass before serving.
 
@@ -38,6 +56,7 @@ per-request outputs match ``ServingEngine.generate`` token-for-token.
 from __future__ import annotations
 
 import collections
+import functools
 import time
 from typing import Callable, Dict, List, Optional
 
@@ -46,16 +65,54 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.masked_sample.ops import masked_argmax
+from repro.models import kvcache
 from repro.serving.session import GenerationResult, Session
+
+
+# -- page allocation -----------------------------------------------------------
+
+
+class PagePool:
+    """Host-side free-list allocator over pool page ids.
+
+    Page 0 is the reserved trash page (vacant block-table entries point at
+    it, so padded decode writes from empty slots land somewhere harmless);
+    pages 1..n_pages-1 are allocatable.  LIFO reuse: a freed page is the
+    next one handed out, which keeps the hot pages hot and makes
+    stale-read bugs surface immediately under test.
+    """
+
+    def __init__(self, n_pages: int):
+        self.n_pages = n_pages
+        self._free: List[int] = list(range(1, n_pages))
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """All-or-nothing: n page ids, or None if the pool can't cover
+        the request (partial grants would deadlock admission)."""
+        if n > len(self._free):
+            return None
+        got = self._free[-n:][::-1] if n else []
+        if n:
+            del self._free[-n:]
+        return got
+
+    def free(self, pages) -> None:
+        self._free.extend(int(p) for p in pages)
+        assert len(self._free) <= self.n_pages - 1
 
 
 # -- per-slot cache surgery ----------------------------------------------------
 #
 # Cache pytree layout (models/kvcache.py): {"len", "head": [block...],
 # "group": {"b#": stacked blocks (leading reps axis)}, "tail": [block...]}.
-# head/tail leaves carry batch on axis 0, group leaves on axis 1 (after the
-# reps axis); "len" is (B,) in a ragged batch cache and scalar in a B=1 row
-# cache.
+# Dense layouts carry batch on leaf axis 0 (head/tail) or 1 (group); paged
+# layouts carry pool pages there instead, with the per-slot block table at
+# cache["pages"].  "len" is (B,) in a ragged batch cache and scalar in a
+# B=1 row cache.
 
 
 def _scatter_row(dst, src, slot):
@@ -70,6 +127,42 @@ def _scatter_row(dst, src, slot):
         k: jax.tree.map(lambda d, s: d.at[:, slot].set(s[:, 0]),
                         dst["group"][k], src["group"][k])
         for k in dst["group"]}
+    return out
+
+
+def _scatter_row_paged(dst, src, slot, page_ids, page_size: int):
+    """Write a dense B=1 row cache ``src`` into the pool pages
+    ``page_ids`` ((max_pages,) int32) of paged batch cache ``dst``.
+
+    ``page_ids`` is always padded to the full table width with trash-page
+    zeros so this jit compiles ONCE (a (n_pg,)-shaped operand would
+    recompile the whole-cache donating scatter per distinct admission
+    page count): the row stripe is copied page-by-page into (generally
+    non-contiguous) pool rows, and every stripe page beyond the
+    allocation collapses onto pool row 0, whose contents are garbage by
+    contract.  The block table itself is host-owned (the scheduler
+    uploads it separately), so only ``len`` and the pool leaves change.
+    """
+    n_pg = page_ids.shape[0]
+
+    def p0(d, s):          # head/tail: (P, ps, ...) <- (1, T, ...)
+        blk = s[0, :n_pg * page_size].reshape(
+            (n_pg, page_size) + s.shape[2:])
+        return d.at[page_ids].set(blk)
+
+    def p1(d, s):          # group: (reps, P, ps, ...) <- (reps, 1, T, ...)
+        blk = s[:, 0, :n_pg * page_size].reshape(
+            (s.shape[0], n_pg, page_size) + s.shape[3:])
+        return d.at[:, page_ids].set(blk)
+
+    out = dict(dst)
+    out["len"] = dst["len"].at[slot].set(src["len"])
+    out["head"] = [jax.tree.map(p0, dc, sc)
+                   for dc, sc in zip(dst["head"], src["head"])]
+    out["tail"] = [jax.tree.map(p0, dc, sc)
+                   for dc, sc in zip(dst["tail"], src["tail"])]
+    out["group"] = {k: jax.tree.map(p1, dst["group"][k], src["group"][k])
+                    for k in dst["group"]}
     return out
 
 
@@ -127,25 +220,77 @@ def _bucket_len(n: int, cap: int) -> int:
     return min(p, cap)
 
 
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
 class ContinuousBatchingScheduler:
     """Admits requests into a fixed-capacity constrained decode batch.
 
     ``overlap`` pipelines host mask construction with device execution;
     ``bucket_prefill`` pads full-attention/MLA admissions to power-of-two
-    prompt lengths.  Both default on; they are observationally pure
-    (token-for-token identical output) and exist as flags only so tests
-    and benchmarks can measure them.
+    prompt lengths; ``adaptive_prebuild`` skips overlapped prebuilds for
+    opportunistic-mode slots whose previous tick did not intervene.  All
+    default on; they are observationally pure (token-for-token identical
+    output) and exist as flags only so tests and benchmarks can measure
+    them.
+
+    Paged KV: ``paged`` defaults to auto — on for architectures whose
+    every cache-bearing block is full-attention / MLA, off otherwise
+    (ring/recurrent rows keep dense state).  ``page_size`` is the pool
+    page length in tokens (the fused kernel's BLOCK_T); ``n_pages`` sizes
+    the pool — default is capacity-equivalent
+    (capacity * max_len / page_size + trash page), and sizing it SMALLER
+    is the point: admission needs only each request's actual pages, so a
+    sub-capacity pool still serves a full batch of short requests where
+    the contiguous layout would hold ``pool_tokens / max_len`` rows.
     """
 
     def __init__(self, engine, capacity: int = 4, overlap: bool = True,
-                 bucket_prefill: bool = True):
+                 bucket_prefill: bool = True,
+                 paged: Optional[bool] = None, page_size: int = 64,
+                 n_pages: Optional[int] = None,
+                 adaptive_prebuild: bool = True):
         self.eng = engine
         self.capacity = max(1, capacity)
         self.overlap = overlap
         self.bucket_prefill = bucket_prefill
+        self.adaptive_prebuild = adaptive_prebuild
         self.waiting: "collections.deque[Session]" = collections.deque()
         self.slots: List[Optional[Session]] = [None] * self.capacity
-        self.cache = engine.model.init_cache(self.capacity, engine.max_len)
+        can_page = kvcache.pageable(engine.model.cfg)
+        if paged and not can_page:
+            # only the auto default may silently fall back to dense —
+            # an explicit request with (possibly undersized) pool sizing
+            # must not quietly allocate capacity x max_len stripes
+            raise ValueError(
+                f"{engine.model.cfg.arch_id}: paged KV requires a pure "
+                "full-attention/MLA stack (ring/recurrent rows keep "
+                "dense state); use paged=None for auto")
+        self.paged = can_page if paged is None else bool(paged)
+        if self.paged:
+            ps = min(page_size, engine.max_len)
+            self.page_size = ps
+            self.max_pages = engine.max_len // ps
+            self.n_pages = (kvcache.default_n_pages(
+                self.capacity, engine.max_len, ps)
+                if n_pages is None else int(n_pages))
+            self.pool = PagePool(self.n_pages)
+            self.cache = engine.model.init_cache(
+                self.capacity, engine.max_len, page_size=ps,
+                n_pages=self.n_pages)
+            # host mirror of the device block table; uploaded (tiny
+            # (B, max_pages) int32) whenever the allocator moves pages
+            self._page_tbl = np.zeros((self.capacity, self.max_pages),
+                                      np.int32)
+            self._n_pages_row = np.zeros(self.capacity, np.int32)
+            self._pages_dirty = False
+            self._scatter_paged = jax.jit(
+                functools.partial(_scatter_row_paged, page_size=ps),
+                donate_argnums=(0,))
+        else:
+            self.cache = engine.model.init_cache(self.capacity,
+                                                 engine.max_len)
         self.cache["len"] = jnp.zeros((self.capacity,), jnp.int32)  # ragged
         vpad = engine.model.padded_vocab
         self._logits = jnp.zeros((self.capacity, vpad), jnp.float32)
@@ -154,8 +299,15 @@ class ContinuousBatchingScheduler:
         # device executed the previous forward; dropped on any checker
         # advance / slot turnover (state changed -> mask stale)
         self._premask: Dict[int, np.ndarray] = {}
+        # opportunistic-mode adaptive prebuild: build a slot's mask only
+        # when its previous tick intervened (the O(token) legality check
+        # failed and a full mask was consulted); fresh slots start False
+        # because the opportunistic fast path usually wins
+        self._opp_intervened = np.zeros(self.capacity, bool)
         self.premask_hits = 0          # selections served by a prebuild
+        self.premask_skips = 0         # prebuilds adaptively skipped
         self.n_fwd = 0                 # global forward count (all slots)
+        self.n_preempt = 0             # paged recompute preemptions
         self._next_rid = 0
 
     # -- public API -------------------------------------------------------------
@@ -199,10 +351,32 @@ class ContinuousBatchingScheduler:
         eng = self.eng
         while self.waiting and None in self.slots:
             slot = self.slots.index(None)
-            sess = self.waiting.popleft()
+            sess = self.waiting[0]
+            # re-admission after preemption re-prefills the generated
+            # prefix too (the checker already advanced past it)
+            ids = list(sess.prompt_ids) + list(sess.out_ids)
+            page_ids = None
+            if self.paged:
+                # +1: the first decode write must fit without a new
+                # allocation, or a lone just-admitted row could preempt
+                # itself forever without committing a token
+                n_pg = _ceil_div(len(ids) + 1, self.page_size)
+                if n_pg > self.max_pages:
+                    raise ValueError(
+                        f"request rid={sess.rid} needs {n_pg} pages "
+                        f"> max_pages {self.max_pages}")
+                page_ids = self.pool.alloc(n_pg)
+                if page_ids is None:
+                    if not any(s is not None for s in self.slots) \
+                            and self.pool.available == self.n_pages - 1:
+                        raise ValueError(
+                            f"request rid={sess.rid} needs {n_pg} pages; "
+                            f"pool only holds {self.n_pages - 1}")
+                    break          # backpressure: wait for frees (FIFO)
+            self.waiting.popleft()
             self._premask.pop(slot, None)
+            self._opp_intervened[slot] = False
             row_cache = eng.model.init_cache(1, eng.max_len)
-            ids = list(sess.prompt_ids)
             inputs = {"tokens": jnp.asarray([ids], jnp.int32)}
             if self.bucket_prefill and not eng._needs_refeed \
                     and not sess.extra_inputs:
@@ -218,7 +392,17 @@ class ContinuousBatchingScheduler:
                 inputs.update(sess.extra_inputs)
             t0 = time.perf_counter()
             logits, row_cache = eng._prefill(eng.params, inputs, row_cache)
-            self.cache = _scatter_row_donate(self.cache, row_cache, slot)
+            if self.paged:
+                padded = np.zeros(self.max_pages, np.int32)
+                padded[:len(page_ids)] = page_ids
+                self.cache = self._scatter_paged(
+                    self.cache, row_cache, slot, jnp.asarray(padded))
+                self._page_tbl[slot, :] = 0
+                self._page_tbl[slot, :len(page_ids)] = page_ids
+                self._n_pages_row[slot] = len(page_ids)
+                self._pages_dirty = True
+            else:
+                self.cache = _scatter_row_donate(self.cache, row_cache, slot)
             self._logits = self._logits.at[slot].set(
                 logits[0, -1].astype(jnp.float32))
             sess.model_time += time.perf_counter() - t0
@@ -246,8 +430,95 @@ class ContinuousBatchingScheduler:
         sess.finish(self.eng.tok.decode)
         if sess.slot >= 0:
             self._premask.pop(sess.slot, None)
+            if self.paged:
+                self._free_slot_pages(sess.slot)
             self.slots[sess.slot] = None
         self._finished_now.append(sess)
+
+    # -- page bookkeeping -------------------------------------------------------
+
+    def _free_slot_pages(self, slot: int) -> None:
+        n = int(self._n_pages_row[slot])
+        if n:
+            self.pool.free(self._page_tbl[slot, :n].tolist())
+        self._page_tbl[slot, :] = 0         # vacant entries -> trash page
+        self._n_pages_row[slot] = 0
+        self._pages_dirty = True
+
+    def _preempt(self, sess: Session) -> None:
+        """Recompute preemption (pool exhausted mid-flight): reclaim the
+        row's pages and return the request to the FRONT of the waiting
+        queue.  On re-admission the prompt plus everything generated so
+        far is re-prefilled; the checker state already reflects the
+        generated prefix, so selection resumes exactly where it left off
+        and outputs are unchanged."""
+        slot = sess.slot
+        self._premask.pop(slot, None)
+        self._free_slot_pages(slot)
+        self.slots[slot] = None
+        sess.slot = -1
+        sess.n_preempt += 1
+        self.n_preempt += 1
+        self.waiting.appendleft(sess)
+
+    def _ensure_pages(self, width: int) -> None:
+        """Grow every resident row's block table to cover the ``width``
+        cache positions this tick's decode will write.  If the pool can't
+        cover everyone, preempt youngest-first until it can — the
+        survivors keep decoding, the victims re-enter the queue."""
+        if not self.paged:
+            return
+        lens = np.asarray(self.cache["len"])
+        while True:
+            need: Dict[int, int] = {}
+            for slot, sess in enumerate(self.slots):
+                if sess is None:
+                    continue
+                want = min(_ceil_div(int(lens[slot]) + width,
+                                     self.page_size), self.max_pages)
+                if want > int(self._n_pages_row[slot]):
+                    need[slot] = want
+            shortfall = sum(w - int(self._n_pages_row[s])
+                            for s, w in need.items())
+            if shortfall <= self.pool.available:
+                break
+            victims = [s for s in self.slots if s is not None]
+            if not victims:
+                break
+            self._preempt(max(victims, key=lambda s: s.t_admit))
+        for slot, want in need.items():
+            have = int(self._n_pages_row[slot])
+            got = self.pool.alloc(want - have)
+            self._page_tbl[slot, have:want] = got
+            self._n_pages_row[slot] = want
+            self._pages_dirty = True
+
+    def _shrink_pages(self) -> None:
+        """Speculative rollback rewound per-row frontiers; pages wholly
+        beyond a row's new length hold only rejected-garbage and go back
+        to the pool (the next ``_ensure_pages`` re-allocates on demand)."""
+        if not self.paged:
+            return
+        lens = np.asarray(self.cache["len"])
+        for slot, sess in enumerate(self.slots):
+            if sess is None:
+                continue
+            keep = _ceil_div(int(lens[slot]), self.page_size)
+            n = int(self._n_pages_row[slot])
+            if n > keep:
+                self.pool.free(self._page_tbl[slot, keep:n].tolist())
+                self._page_tbl[slot, keep:n] = 0
+                self._n_pages_row[slot] = keep
+                self._pages_dirty = True
+
+    def _sync_pages(self) -> None:
+        """Upload the host block table to the device cache if the
+        allocator moved pages since the last forward."""
+        if self.paged and self._pages_dirty:
+            cache = dict(self.cache)
+            cache["pages"] = jnp.asarray(self._page_tbl)
+            self.cache = cache
+            self._pages_dirty = False
 
     # -- mask pipeline ----------------------------------------------------------
 
@@ -257,11 +528,24 @@ class ContinuousBatchingScheduler:
         forward; build time accrues to per-session mask_time immediately,
         but the overlap credit is decided by the caller (``_run_decode``)
         once it knows whether the device actually outlasted the build.
-        Returns [(session, build_seconds), ...] for that decision."""
+        Returns [(session, build_seconds), ...] for that decision.
+
+        Under opportunistic checking the raw-argmax legality check
+        usually makes the mask dead weight, so the prebuild is skipped
+        for slots whose previous tick did NOT intervene — accounting
+        stays honest automatically: a skipped build adds no mask_time and
+        can earn no overlap credit."""
+        eng = self.eng
+        opportunistic = (eng.cfg.opportunistic
+                         and eng.cfg.temperature <= 0.0)
         built = []
         for slot, sess in enumerate(self.slots):
             if sess is None or sess.checker is None \
                     or slot in self._premask:
+                continue
+            if self.adaptive_prebuild and opportunistic \
+                    and not self._opp_intervened[slot]:
+                self.premask_skips += 1
                 continue
             t0 = time.perf_counter()
             m = sess.checker.mask()
@@ -296,10 +580,14 @@ class ContinuousBatchingScheduler:
                 ok = ch.check_token(int(raw[slot]))
                 sess.mask_time += time.perf_counter() - t0
                 if ok:
+                    self._opp_intervened[slot] = False
                     masks[slot, :] = 0
                     masks[slot, raw[slot]] = 1
                     row_mask_bool[slot] = None
                     continue
+                # fast path lost: a full mask is needed this tick, so
+                # next tick's prebuild is worth building again
+                self._opp_intervened[slot] = True
             m = self._premask.pop(slot, None)   # overlapped prebuild
             if m is None:
                 t0 = time.perf_counter()
@@ -374,6 +662,7 @@ class ContinuousBatchingScheduler:
         execution, not dispatch (the host would otherwise pay the wait
         inside the next tick's argmax readback, attributed to nothing)."""
         eng = self.eng
+        self._sync_pages()
         t0 = time.perf_counter()
         lg, self.cache = eng._decode(eng.params, self.cache, feed)
         built = []
@@ -402,6 +691,7 @@ class ContinuousBatchingScheduler:
 
     def _plain_step(self) -> None:
         eng = self.eng
+        self._ensure_pages(1)
         live = self._commit_first(self._choose())
         if not any(s is not None for s in self.slots):
             return
@@ -417,6 +707,9 @@ class ContinuousBatchingScheduler:
     def _spec_step(self) -> None:
         eng = self.eng
         pad = eng.tok.pad_id
+        # reserve the full verify window up front: growing mid-tick could
+        # preempt a row whose token was already committed into the feed
+        self._ensure_pages(1 + eng.cfg.spec_s)
         live = self._commit_first(self._choose())
         if not any(s is not None for s in self.slots):
             return
@@ -436,6 +729,7 @@ class ContinuousBatchingScheduler:
             lg = self._run_decode(jnp.asarray(feed, jnp.int32),
                                   overlap_fn=self._prebuild_masks)
             self._logits = lg[:, -1].astype(jnp.float32)
+            self._shrink_pages()       # return the unused verify window
             return
         width = 1 + eng.cfg.spec_s
         feed = [[pad] * width for _ in range(self.capacity)]
@@ -461,13 +755,16 @@ class ContinuousBatchingScheduler:
                                lg_dev)
         else:
             # per-row rollback: KV entries beyond `len` are masked by
-            # validity, so rewinding the per-row length is the whole rollback
+            # validity, so rewinding the per-row length is the whole
+            # rollback; pages now wholly beyond a frontier go back to the
+            # pool right away
             cache = dict(self.cache)
             cache["len"] = snap_len + 1 + jnp.asarray(accepted_vec)
             self.cache = cache
             self._logits = lg_dev[
                 jnp.arange(self.capacity), jnp.asarray(accepted_vec)
             ].astype(jnp.float32)
+            self._shrink_pages()
 
     def _verify_row(self, slot: int, props: List[int],
                     lg_row: np.ndarray) -> int:
@@ -490,6 +787,9 @@ class ContinuousBatchingScheduler:
                 if ok:
                     tok_i = prop
             if tok_i is None:
+                # a full mask is needed at this position — worth
+                # prebuilding again next tick under opportunistic mode
+                self._opp_intervened[slot] = True
                 # position 0 selects from the state the overlapped
                 # prebuild saw; later positions advanced past it
                 pre = self._premask.pop(slot, None) if i == 0 else None

@@ -32,6 +32,10 @@ class GenerationResult:
     # mask_time_s - mask_overlap_s is what actually sat on the critical
     # path
     mask_overlap_s: float = 0.0
+    # times this request was recompute-preempted by the paged-KV
+    # scheduler (pages reclaimed under pool pressure, prompt + generated
+    # prefix re-prefilled on re-admission)
+    n_preemptions: int = 0
     # the checker reached a state with NO legal token (including EOS).
     # Output up to this point is a valid *prefix* but cannot be completed;
     # forcing EOS here would silently emit grammar-violating output.
@@ -62,6 +66,7 @@ class Session:
     n_int: int = 0
     n_prop: int = 0
     n_acc: int = 0
+    n_preempt: int = 0                # paged-KV recompute preemptions
     mask_time: float = 0.0            # this request's checker time only
     mask_overlap: float = 0.0         # ... of which hidden under device
     model_time: float = 0.0
@@ -85,6 +90,7 @@ class Session:
             n_spec_accepted=self.n_acc,
             mask_time_s=self.mask_time,
             mask_overlap_s=self.mask_overlap,
+            n_preemptions=self.n_preempt,
             model_time_s=self.model_time,
             wall_time_s=self.t_finish - self.t_submit,
             finished=self.finished_eos,

@@ -1,0 +1,485 @@
+"""Paged KV cache: block-table slots through the ragged flash-decode
+kernel (ISSUE 3 tentpole).
+
+Kernel level: the paged pool + block-table read must match the
+dense/contiguous oracle EXACTLY (same tile order, same accumulation) on
+mixed ragged lengths, S>1 verify windows, the MLA split layout and rows
+spanning non-contiguous pool pages.  Scheduler level: the page allocator
+(alloc/free/reuse, exhaustion backpressure, recompute preemption,
+rollback shrink) must be observationally pure — token-for-token identical
+to single-request generation and to the dense-stripe scheduler.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MLAConfig, ModelConfig, SSMConfig
+from repro.core import grammars
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import (decode_attention_ref,
+                                                gather_pages)
+from repro.models import build_model, kvcache
+from repro.serving import (ContinuousBatchingScheduler, EngineConfig,
+                           ServingEngine)
+from repro.serving.scheduler import PagePool
+
+RNG = np.random.default_rng(7)
+
+BASE = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+            dtype="float32", max_seq_len=512)
+
+PROMPTS = ["a: ", "some much longer json prompt here: ", "x",
+           "record -> "]
+
+
+def _build(arch: str, vocab_size: int, **over):
+    if arch == "attn":
+        cfg = ModelConfig(arch_id="p-attn", family="dense",
+                          vocab_size=vocab_size, **BASE, **over)
+    elif arch == "mla":
+        cfg = ModelConfig(arch_id="p-mla", family="dense", group=("mla",),
+                          vocab_size=vocab_size,
+                          mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16,
+                                        qk_nope_head_dim=16,
+                                        qk_rope_head_dim=8, v_head_dim=16),
+                          **BASE, **over)
+    elif arch == "ssm":
+        cfg = ModelConfig(arch_id="p-ssm", family="ssm", group=("mamba1",),
+                          vocab_size=vocab_size,
+                          ssm=SSMConfig(d_state=8, version=1), **BASE,
+                          **over)
+    else:
+        raise ValueError(arch)
+    m = build_model(cfg)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+def _shuffled_tables(lens, page_size, max_pages, n_pages):
+    """Block tables whose pages are deliberately non-contiguous: row i's
+    logical tile j maps to a shuffled pool row."""
+    perm = list(RNG.permutation(np.arange(1, n_pages)))
+    tbl = np.zeros((len(lens), max_pages), np.int32)
+    for i, ln in enumerate(lens):
+        n_pg = -(-int(ln) // page_size)
+        tbl[i, :n_pg] = perm[:n_pg]
+        del perm[:n_pg]
+    return jnp.asarray(tbl)
+
+
+# -- kernel ------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("s_win,lens", [
+    (1, [100, 0, 17, 256]), (4, [60, 250, 0, 5]), (3, [31, 32, 33, 1])])
+def test_paged_kernel_matches_dense_exactly(s_win, lens):
+    """Rows spanning non-contiguous pool pages: the paged kernel must be
+    BITWISE identical to the dense kernel on the gathered view (same tile
+    sequence, same accumulation order) and match the jnp oracle."""
+    b, g, qh, d, ps = 4, 2, 2, 32, 32
+    mp = 256 // ps
+    n_pages = 1 + sum(-(-max(l, 1) // ps) for l in lens) + 2
+    pool_k = jnp.asarray(RNG.normal(size=(n_pages, ps, g, d)),
+                         jnp.float32)
+    pool_v = jnp.asarray(RNG.normal(size=(n_pages, ps, g, d)),
+                         jnp.float32)
+    tbl = _shuffled_tables(lens, ps, mp, n_pages)
+    ln = jnp.asarray(lens, jnp.int32)
+    q = jnp.asarray(RNG.normal(size=(b, s_win, g, qh, d)), jnp.float32)
+    qq = q[:, 0] if s_win == 1 else q
+    o_paged = decode_attention(qq, pool_k, pool_v, ln, block_tables=tbl)
+    k_d, v_d = gather_pages(pool_k, tbl), gather_pages(pool_v, tbl)
+    o_dense = decode_attention(qq, k_d, v_d, ln, block_t=ps)
+    np.testing.assert_array_equal(np.asarray(o_paged), np.asarray(o_dense))
+    o_ref = decode_attention_ref(qq, pool_k, pool_v, ln, block_tables=tbl)
+    np.testing.assert_allclose(np.asarray(o_paged), np.asarray(o_ref),
+                               atol=3e-5, rtol=1e-3)
+
+
+def test_paged_kernel_mla_split_layout():
+    """Absorbed-MLA split score (q.ckv^T + q_rope.krope^T) against paged
+    latent + rope pools, Dv = r."""
+    b, h, r, dr, ps, mp = 3, 4, 16, 8, 16, 8
+    lens = [100, 3, 0]
+    n_pages = 16
+    scale = 0.23
+    q1 = jnp.asarray(RNG.normal(size=(b, 1, 1, h, r)), jnp.float32)
+    q2 = jnp.asarray(RNG.normal(size=(b, 1, 1, h, dr)), jnp.float32)
+    k1 = jnp.asarray(RNG.normal(size=(n_pages, ps, 1, r)), jnp.float32)
+    k2 = jnp.asarray(RNG.normal(size=(n_pages, ps, 1, dr)), jnp.float32)
+    tbl = _shuffled_tables(lens, ps, mp, n_pages)
+    ln = jnp.asarray(lens, jnp.int32)
+    o_paged = decode_attention(q1, k1, k1, ln, scale=scale, q2=q2, k2=k2,
+                               block_tables=tbl)
+    o_dense = decode_attention(q1, gather_pages(k1, tbl),
+                               gather_pages(k1, tbl), ln, block_t=ps,
+                               scale=scale, q2=q2,
+                               k2=gather_pages(k2, tbl))
+    np.testing.assert_array_equal(np.asarray(o_paged), np.asarray(o_dense))
+    o_ref = decode_attention_ref(q1, k1, k1, ln, scale=scale, q2=q2,
+                                 k2=k2, block_tables=tbl)
+    np.testing.assert_allclose(np.asarray(o_paged), np.asarray(o_ref),
+                               atol=3e-5, rtol=1e-3)
+
+
+def test_paged_kernel_ignores_garbage_in_foreign_pages():
+    """Poisoning pool pages NOT referenced below a row's frontier must
+    not change its output (the validity contract through block tables)."""
+    b, g, qh, d, ps = 2, 1, 2, 16, 16
+    lens = [20, 0]
+    n_pages = 8
+    pool_k = jnp.asarray(RNG.normal(size=(n_pages, ps, g, d)), jnp.float32)
+    pool_v = jnp.asarray(RNG.normal(size=(n_pages, ps, g, d)), jnp.float32)
+    tbl = jnp.asarray([[3, 5, 0, 0], [0, 0, 0, 0]], jnp.int32)
+    ln = jnp.asarray(lens, jnp.int32)
+    qq = jnp.asarray(RNG.normal(size=(b, g, qh, d)), jnp.float32)
+    o1 = decode_attention(qq, pool_k, pool_v, ln, block_tables=tbl)
+    # poison every pool row except 3 and 5, plus the tail of page 5
+    # beyond position 20 (= in-page offset 4)
+    keep = np.zeros(n_pages, bool)
+    keep[[3, 5]] = True
+    pk = np.array(pool_k)
+    pv = np.array(pool_v)
+    pk[~keep] = 1e6
+    pv[~keep] = -1e6
+    pk[5, 4:] = 1e6
+    pv[5, 4:] = -1e6
+    o2 = decode_attention(qq, jnp.asarray(pk), jnp.asarray(pv), ln,
+                          block_tables=tbl)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+    # the empty row reads nothing at all
+    np.testing.assert_allclose(np.asarray(o1[1]), 0.0, atol=1e-6)
+
+
+# -- allocator ---------------------------------------------------------------
+
+
+def test_page_pool_alloc_free_reuse():
+    pool = PagePool(8)                  # pages 1..7 usable
+    assert pool.available == 7
+    a = pool.alloc(3)
+    b = pool.alloc(2)
+    assert len(a) == 3 and len(b) == 2
+    assert 0 not in a + b               # trash page never issued
+    assert len(set(a + b)) == 5
+    assert pool.alloc(3) is None        # all-or-nothing: only 2 left
+    assert pool.available == 2          # ... and a refused alloc takes none
+    pool.free(a)
+    assert pool.available == 5
+    c = pool.alloc(5)
+    assert set(c) >= set(a)             # freed pages are reused (LIFO)
+    pool.free(b + c)
+    assert pool.available == 7
+    assert pool.alloc(0) == []
+
+
+def test_paged_cache_layout_and_pageable():
+    cfg = ModelConfig(arch_id="p-l", family="dense", vocab_size=64, **BASE)
+    assert kvcache.pageable(cfg)
+    cache = kvcache.init_cache(cfg, batch=3, max_len=128, page_size=32,
+                               n_pages=10)
+    assert cache["pages"].shape == (3, 4)
+    assert int(cache["pages"].min()) == 0          # init -> trash page
+    k = cache["group"]["b0"]["k"]                  # (reps, P, ps, nkv, dh)
+    assert k.shape[1:3] == (10, 32)
+    assert kvcache.page_size_of(cache) == 32
+    # ring/recurrent archs are not pageable
+    ssm_cfg = ModelConfig(arch_id="p-s", family="ssm", group=("mamba1",),
+                          vocab_size=64, ssm=SSMConfig(d_state=8),
+                          **BASE)
+    assert not kvcache.pageable(ssm_cfg)
+    swa_cfg = ModelConfig(arch_id="p-w", family="dense",
+                          group=("swa", "attn"), sliding_window=16,
+                          vocab_size=64, **BASE)
+    assert not kvcache.pageable(swa_cfg)
+
+
+def test_scheduler_disables_paging_on_refeed_archs(small_tokenizer,
+                                                   json_grammar):
+    tok = small_tokenizer
+    m, params = _build("ssm", tok.vocab_size)
+    eng = ServingEngine(m, params, tok, json_grammar,
+                        EngineConfig(mode="domino", max_tokens=4),
+                        max_len=256)
+    sched = ContinuousBatchingScheduler(eng, capacity=2)
+    assert not sched.paged
+    assert "pages" not in sched.cache
+    # the auto default falls back silently; an EXPLICIT paged=True with
+    # its own pool sizing must not quietly allocate dense stripes
+    with pytest.raises(ValueError, match="paged KV"):
+        ContinuousBatchingScheduler(eng, capacity=2, paged=True,
+                                    n_pages=8)
+
+
+def test_writes_past_max_len_land_on_trash_page(small_tokenizer):
+    """A decode at a full row (len == max_len) writes past the block
+    table's capacity — the dense layout drops the OOB scatter, so the
+    paged layout must route it to the trash page, NOT clamp onto the
+    row's newest live page and corrupt accepted KV."""
+    tok = small_tokenizer
+    m, params = _build("attn", tok.vocab_size)
+    cache = m.init_cache(1, 32, page_size=8, n_pages=6)
+    cache["len"] = jnp.asarray([32], jnp.int32)           # row is full
+    cache["pages"] = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+    before = jax.tree.map(lambda x: np.array(x), {
+        "head": cache["head"], "tail": cache["tail"],
+        "group": cache["group"]})
+    _, new_cache = m.decode_step(params, cache,
+                                 jnp.asarray([[5]], jnp.int32))
+    for b0, b1 in zip(before["head"] + before["tail"],
+                      new_cache["head"] + new_cache["tail"]):
+        for key in b0:
+            np.testing.assert_array_equal(b0[key][1:5],
+                                          np.asarray(b1[key])[1:5])
+    for k in before["group"]:
+        for key in before["group"][k]:
+            np.testing.assert_array_equal(
+                before["group"][k][key][:, 1:5],
+                np.asarray(new_cache["group"][k][key])[:, 1:5])
+
+
+# -- scheduler ---------------------------------------------------------------
+
+
+def test_paged_scheduler_matches_dense_and_single(small_tokenizer,
+                                                  json_grammar):
+    """The whole point: per-request pages instead of contiguous stripes,
+    token-for-token identical output."""
+    tok = small_tokenizer
+    m, params = _build("attn", tok.vocab_size)
+    eng = ServingEngine(m, params, tok, json_grammar,
+                        EngineConfig(mode="domino", max_tokens=10),
+                        max_len=256)
+    singles = [eng.generate(p) for p in PROMPTS]
+    dense = ContinuousBatchingScheduler(eng, capacity=2, paged=False)
+    s_d = [dense.submit(p) for p in PROMPTS]
+    dense.run()
+    paged = ContinuousBatchingScheduler(eng, capacity=2, page_size=16)
+    s_p = [paged.submit(p) for p in PROMPTS]
+    paged.run()
+    assert paged.paged and not dense.paged
+    for single, d, p in zip(singles, s_d, s_p):
+        assert p.result.token_ids == single.token_ids
+        assert p.result.token_ids == d.result.token_ids
+    # eviction returned every page
+    assert paged.pool.available == paged.n_pages - 1
+    assert np.all(paged._page_tbl == 0)
+
+
+def test_paged_decode_routes_block_tables_through_kernel(small_tokenizer,
+                                                         json_grammar,
+                                                         monkeypatch):
+    """With use_pallas_kernels the paged batched decode must hand the
+    block table to kernels/decode_attention (no dense gather)."""
+    import repro.kernels.decode_attention.ops as dec_ops
+
+    tok = small_tokenizer
+    m, params = _build("attn", tok.vocab_size, use_pallas_kernels=True)
+    calls = {"paged": 0, "total": 0}
+    real = dec_ops.decode_attention
+
+    def spy(q, k, v, lengths, **kw):
+        calls["total"] += 1
+        if kw.get("block_tables") is not None:
+            calls["paged"] += 1
+            assert k.ndim == 4 and k.shape[1] == 16   # (P, ps, G, D) pool
+        return real(q, k, v, lengths, **kw)
+
+    monkeypatch.setattr(dec_ops, "decode_attention", spy)
+    eng = ServingEngine(m, params, tok, json_grammar,
+                        EngineConfig(mode="domino", max_tokens=8),
+                        max_len=256)
+    sched = ContinuousBatchingScheduler(eng, capacity=2, page_size=16)
+    sessions = [sched.submit(p) for p in PROMPTS[:2]]
+    sched.run()
+    assert calls["paged"] > 0
+    # parity vs the dense-fallback (kernels off) scheduler
+    m0, _ = _build("attn", tok.vocab_size)
+    eng0 = ServingEngine(m0, params, tok, json_grammar,
+                         EngineConfig(mode="domino", max_tokens=8),
+                         max_len=256)
+    base = eng0.generate_batch(PROMPTS[:2], max_batch=2)
+    for r0, s1 in zip(base, sessions):
+        assert r0.token_ids == s1.result.token_ids
+
+
+def test_admission_blocks_on_pool_exhaustion_then_resumes(small_tokenizer,
+                                                          json_grammar):
+    """Backpressure: with pages for only one resident request, the second
+    must wait in the queue (slot free, pool empty) and be admitted only
+    after the first finishes and frees its pages — outputs unchanged."""
+    tok = small_tokenizer
+    m, params = _build("attn", tok.vocab_size)
+    eng = ServingEngine(m, params, tok, json_grammar,
+                        EngineConfig(mode="domino", max_tokens=6),
+                        max_len=256)
+    singles = [eng.generate(p) for p in PROMPTS[:2]]
+    # ONE usable 64-token page: each request fits in it (prompt + budget
+    # < 64), but only one can hold it at a time
+    for p in PROMPTS[:2]:
+        assert len(tok.encode(p)) + 6 < 64
+    sched = ContinuousBatchingScheduler(eng, capacity=2, page_size=64,
+                                        n_pages=2)
+    sessions = [sched.submit(p) for p in PROMPTS[:2]]
+    sched.step()
+    # one admitted, one blocked on pages despite the free slot
+    assert sum(s is not None for s in sched.slots) == 1
+    assert len(sched.waiting) == 1
+    blocked_while_free_slot = sched.waiting[0] is sessions[1]
+    assert blocked_while_free_slot
+    sched.run()
+    for single, s in zip(singles, sessions):
+        assert s.result.token_ids == single.token_ids
+    assert sched.pool.available == sched.n_pages - 1
+
+
+def test_no_stale_reads_after_page_reuse(small_tokenizer, json_grammar):
+    """A freed page re-issued to a new session must contribute nothing:
+    poison the whole pool between requests and re-serve — the new
+    session overwrites every position below its own frontier, so output
+    is unchanged."""
+    tok = small_tokenizer
+    m, params = _build("attn", tok.vocab_size)
+    eng = ServingEngine(m, params, tok, json_grammar,
+                        EngineConfig(mode="domino", max_tokens=6),
+                        max_len=256)
+    single = eng.generate(PROMPTS[1])
+    sched = ContinuousBatchingScheduler(eng, capacity=1, page_size=16)
+    first = sched.submit(PROMPTS[0])
+    sched.run()
+    assert sched.pool.available == sched.n_pages - 1
+    # poison every pool page (they are all free now)
+    def poison(leaf):
+        return jnp.full_like(leaf, 1e6) if leaf.dtype != jnp.int32 else leaf
+    cache = dict(sched.cache)
+    cache["head"] = [jax.tree.map(poison, c) for c in cache["head"]]
+    cache["tail"] = [jax.tree.map(poison, c) for c in cache["tail"]]
+    cache["group"] = {k: jax.tree.map(poison, v)
+                      for k, v in cache["group"].items()}
+    sched.cache = cache
+    second = sched.submit(PROMPTS[1])   # reuses first's freed pages (LIFO)
+    sched.run()
+    assert second.result.token_ids == single.token_ids
+    assert first.result is not None
+
+
+def test_spec_rollback_shrinks_row_page_count(small_tokenizer):
+    """Speculative rejection rewinds the frontier; pages wholly beyond it
+    must return to the pool while the session is still resident."""
+    tok = small_tokenizer
+    m, params = _build("attn", tok.vocab_size)
+    g = grammars.load("json_gsm8k")
+    plain = ServingEngine(m, params, tok, g,
+                          EngineConfig(mode="domino", max_tokens=16),
+                          max_len=256)
+    base = plain.generate_batch(["A: ", "Q: compute 1 + 2\nA: "])
+    spec = ServingEngine(m, params, tok, g,
+                         EngineConfig(mode="domino", speculative=True,
+                                      spec_s=4, spec_threshold=0.4,
+                                      max_tokens=16), max_len=256)
+    spec.generate("A: ")                # warm the count model
+    sched = ContinuousBatchingScheduler(spec, capacity=2, page_size=8)
+    shrunk = {"pages": 0}
+    orig = sched._shrink_pages
+
+    def spy():
+        before = sched._n_pages_row.copy()
+        orig()
+        live = [i for i, s in enumerate(sched.slots) if s is not None]
+        shrunk["pages"] += int((before[live]
+                                - sched._n_pages_row[live]).sum())
+
+    sched._shrink_pages = spy
+    sessions = [sched.submit(p) for p in ["A: ", "Q: compute 1 + 2\nA: "]]
+    sched.run()
+    assert shrunk["pages"] > 0          # rollback returned pages mid-flight
+    for b0, s1 in zip(base, sessions):
+        assert s1.result.token_ids == b0.token_ids
+    assert sched.pool.available == sched.n_pages - 1
+
+
+def test_preemption_under_pool_pressure_is_output_invariant(
+        small_tokenizer, json_grammar):
+    """Mid-flight exhaustion recompute-preempts the youngest row; the
+    victim is re-prefilled (prompt + generated prefix) and completes with
+    identical output."""
+    tok = small_tokenizer
+    m, params = _build("attn", tok.vocab_size)
+    eng = ServingEngine(m, params, tok, json_grammar,
+                        EngineConfig(mode="domino", max_tokens=12),
+                        max_len=256)
+    singles = [eng.generate(p) for p in PROMPTS]
+    sched = ContinuousBatchingScheduler(eng, capacity=4, page_size=8,
+                                        n_pages=7)   # 6 usable pages
+    sessions = [sched.submit(p) for p in PROMPTS]
+    sched.run()
+    assert sched.n_preempt > 0
+    assert sum(s.result.n_preemptions for s in sessions) == sched.n_preempt
+    for single, s in zip(singles, sessions):
+        assert s.result.token_ids == single.token_ids
+    assert sched.pool.available == sched.n_pages - 1
+
+
+def test_paged_mla_scheduler_parity(small_tokenizer, json_grammar):
+    """MLA latent/rope pools through the paged path (dense fallback and
+    fused split-score kernel) match single-request generation."""
+    tok = small_tokenizer
+    m, params = _build("mla", tok.vocab_size)
+    eng = ServingEngine(m, params, tok, json_grammar,
+                        EngineConfig(mode="domino", max_tokens=8),
+                        max_len=256)
+    singles = [eng.generate(p) for p in PROMPTS[:3]]
+    sched = ContinuousBatchingScheduler(eng, capacity=2, page_size=16)
+    sessions = [sched.submit(p) for p in PROMPTS[:3]]
+    sched.run()
+    for single, s in zip(singles, sessions):
+        assert s.result.token_ids == single.token_ids
+    mk, _ = _build("mla", tok.vocab_size, use_pallas_kernels=True)
+    engk = ServingEngine(mk, params, tok, json_grammar,
+                         EngineConfig(mode="domino", max_tokens=8),
+                         max_len=256)
+    schedk = ContinuousBatchingScheduler(engk, capacity=2, page_size=16)
+    sk = [schedk.submit(p) for p in PROMPTS[:3]]
+    schedk.run()
+    for single, s in zip(singles, sk):
+        assert s.result.token_ids == single.token_ids
+
+
+# -- satellite: opportunistic adaptive prebuild ------------------------------
+
+
+def test_opportunistic_adaptive_prebuild(small_tokenizer, json_grammar):
+    """Under opportunistic checking the overlapped prebuild is skipped
+    for slots whose previous tick did not intervene; outputs and the
+    overlap-credit invariant are unchanged, and skipped builds add no
+    mask time."""
+    tok = small_tokenizer
+    m, params = _build("attn", tok.vocab_size)
+    eng = ServingEngine(m, params, tok, json_grammar,
+                        EngineConfig(mode="domino", opportunistic=True,
+                                     max_tokens=10), max_len=256)
+    singles = [eng.generate(p) for p in PROMPTS]
+    ad = ContinuousBatchingScheduler(eng, capacity=2)
+    s_ad = [ad.submit(p) for p in PROMPTS]
+    ad.run()
+    off = ContinuousBatchingScheduler(eng, capacity=2,
+                                      adaptive_prebuild=False)
+    s_off = [off.submit(p) for p in PROMPTS]
+    off.run()
+    for single, a, b in zip(singles, s_ad, s_off):
+        assert a.result.token_ids == single.token_ids
+        assert b.result.token_ids == single.token_ids
+    assert ad.premask_skips > 0         # prebuilds actually skipped
+    assert off.premask_skips == 0
+    for s in s_ad:                      # accounting stays honest
+        assert s.result.mask_overlap_s <= s.result.mask_time_s + 1e-9
+    # non-opportunistic serving is unaffected by the adaptive flag
+    eng2 = ServingEngine(m, params, tok, json_grammar,
+                         EngineConfig(mode="domino", max_tokens=6),
+                         max_len=256)
+    sched2 = ContinuousBatchingScheduler(eng2, capacity=2)
+    [sched2.submit(p) for p in PROMPTS[:2]]
+    sched2.run()
+    assert sched2.premask_skips == 0
