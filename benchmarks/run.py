@@ -13,8 +13,9 @@ import time
 
 def main() -> None:
     from benchmarks import (fig2_template, fig5_speculation, kernel_bench,
-                            precompute_cost, table2_invasiveness,
-                            table2b_ner, table3_throughput, table4_lookahead)
+                            mask_bench, precompute_cost,
+                            table2_invasiveness, table2b_ner,
+                            table3_throughput, table4_lookahead)
     sections = {
         "precompute": precompute_cost.run,
         "table2": table2_invasiveness.run,
@@ -24,6 +25,7 @@ def main() -> None:
         "fig2": fig2_template.run,
         "fig5": fig5_speculation.run,
         "kernels": kernel_bench.run,
+        "mask": mask_bench.run,
     }
     want = sys.argv[1:] or list(sections)
     print("name,us_per_call,derived")

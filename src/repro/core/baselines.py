@@ -62,6 +62,13 @@ class OnlineParserDecoder(DominoDecoder):
             out[self.eos_id] = True
         return out
 
+    def mask_bits(self, k=None) -> np.ndarray:
+        """Pack the online-scanned mask.  No tree segments and no memo —
+        re-checking the whole vocabulary every step IS the baseline cost
+        profile this class exists to measure."""
+        from repro.core import bitmask
+        return bitmask.pack_bool(self.mask(k))
+
 
 # ---------------------------------------------------------------------------
 # Template-based (GUIDANCE-style)

@@ -98,6 +98,19 @@ class HealedDecoder:
                 out[t] = True
         return out
 
+    def mask_bits(self, k: Optional[int] = None) -> np.ndarray:
+        """Packed mask: delegate to the (memoized) inner decoder once the
+        forced prefix is consumed; while the prefix is live, pack the
+        candidate scan (few tokens, no tree walk — not worth a memo)."""
+        if not self.rest:
+            return self.inner.mask_bits(k)
+        from repro.core import bitmask
+        return bitmask.pack_bool(self.mask(k))
+
+    @property
+    def n_mask_memo_hits(self) -> int:
+        return self.inner.n_mask_memo_hits
+
     def check_token(self, token_id: int) -> bool:
         if not self.rest:
             return self.inner.check_token(token_id)

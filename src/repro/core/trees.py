@@ -18,12 +18,24 @@ the parser, bounded by the lookahead ``k``) instead of scanning |V| tokens.
 Construction shares work across tokens by DFS over a byte *trie* of the
 vocabulary: all tokens with a common byte prefix reuse the same scanner
 branch frontier.
+
+Each node additionally carries *packed bitset segments* of its token
+buckets (``fresh_bits`` / ``partial_bits``, uint32 words in the
+``core/bitmask.py`` layout), attached once at build time.  Mask assembly
+then becomes a vectorized ``np.bitwise_or`` accumulation over visited
+nodes — no per-token-id fancy-index scatters on the serving critical
+path — and the assembled full-vocabulary masks are memoized on the cache
+(``mask_memo``), keyed by the decoder's immutable hypothesis state, so a
+recurring grammar state is a dict lookup.
 """
 from __future__ import annotations
 
 import time
 from typing import Dict, FrozenSet, List, Optional, Tuple
 
+import numpy as np
+
+from repro.core import bitmask
 from repro.core.scanner import FRESH, Scanner
 
 
@@ -60,13 +72,19 @@ class VocabTrie:
 
 
 class TreeNode:
-    __slots__ = ("children", "tokens_fresh", "tokens_partial")
+    __slots__ = ("children", "tokens_fresh", "tokens_partial",
+                 "fresh_bits", "partial_bits")
 
     def __init__(self):
         self.children: Dict[int, "TreeNode"] = {}
         self.tokens_fresh: List[int] = []
         # frozenset of candidate partial-terminal ids -> token ids
         self.tokens_partial: Dict[FrozenSet[int], List[int]] = {}
+        # packed (ceil(V/32),) uint32 segments of the buckets above,
+        # attached by TreeCache._build once construction is done; None
+        # for an empty fresh bucket (the walk guards on the list)
+        self.fresh_bits: Optional[np.ndarray] = None
+        self.partial_bits: Dict[FrozenSet[int], np.ndarray] = {}
 
     def size(self) -> int:
         n = 1
@@ -130,6 +148,18 @@ class TreeCache:
         self.trie = VocabTrie.build(vocab)
         self.trees: Dict[object, SubterminalTree] = {}
         self.build_time_s = 0.0
+        # full-mask memo, shared by every decoder on this grammar: key =
+        # decoder hypothesis digest (DominoDecoder._memo_key) -> packed
+        # (n_mask_words,) uint32 mask.  Entries never go STALE (grammar
+        # states are immutable, a key maps to exactly one mask), but the
+        # whole-history fingerprint in the key makes most decode steps a
+        # fresh entry, so an uncapped memo grows without bound on a
+        # long-lived server (n_mask_words*4 bytes per entry — 32 KiB at
+        # gemma3's V).  FIFO-evict past mask_memo_max: dropping an entry
+        # only costs a rebuild, never correctness.
+        self.n_mask_words = bitmask.n_words(len(vocab))
+        self.mask_memo: Dict[object, np.ndarray] = {}
+        self.mask_memo_max = 4096
 
     def tree(self, position) -> SubterminalTree:
         key = position
@@ -218,6 +248,21 @@ class TreeCache:
                     dfs(child, nb)
 
         dfs(self.trie, init)
+        self._attach_bits(root)
         tree = SubterminalTree(root, position)
         tree._positions = positions  # type: ignore[attr-defined]
         return tree
+
+    def _attach_bits(self, root: TreeNode) -> None:
+        """Pack every node's token buckets into uint32 bitset segments
+        (build-time cost, so the mask walk is pure bitwise_or)."""
+        v = len(self.vocab)
+        stack = [root]
+        while stack:
+            node = stack.pop()
+            if node.tokens_fresh:
+                node.fresh_bits = bitmask.pack_ids(node.tokens_fresh, v)
+            node.partial_bits = {
+                tids: bitmask.pack_ids(toks, v)
+                for tids, toks in node.tokens_partial.items()}
+            stack.extend(node.children.values())

@@ -7,6 +7,20 @@ step per sequence (1 MiB at gemma3's V=262144 fp32).  The fused kernel
 streams logits tiles HBM->VMEM once, applies the mask in-register and
 keeps a running (max, argmax) in VMEM scratch across vocabulary tiles.
 
+Two mask operand layouts:
+
+ - int8 (B, V): one byte per token (legacy / oracle layout);
+ - packed uint32 (B, ceil(V/32)): the ``core/bitmask.py`` wire format.
+   Each vocab tile loads only ``BLOCK_V/32`` words and unpacks them
+   in-register — the (BLOCK_V/32, 32) word-broadcast + lane-shift + AND
+   below — fused with the running argmax, so the host ships 8x fewer
+   mask bytes and the unpack never touches HBM.
+
+Tail tiles: when ``v % block_v != 0`` the operands are padded up to the
+next tile boundary (logits to NEG, mask to 0) instead of collapsing to a
+single whole-vocabulary tile — ``block_v = v`` at real vocab sizes
+(V=262144 -> a 1 MiB+ logits tile plus mask) blows the VMEM budget.
+
 Grid: (B, V / BLOCK_V), sequential over the vocab axis (TPU grid order is
 minor-first), so the scratch carries state between vocab tiles of the same
 row.  The masked-out value is -1e30; ties resolve to the lowest index
@@ -22,6 +36,23 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG = -1e30
+WORD_BITS = 32
+
+
+def _pad_tail(logits: jnp.ndarray, mask: jnp.ndarray, block_v: int,
+              mask_pad_words: int = 0):
+    """Pad the vocab axis up to a tile boundary: logits with NEG (never
+    wins the argmax), mask with 0 (nothing becomes legal)."""
+    v = logits.shape[1]
+    v_pad = -(-v // block_v) * block_v
+    if v_pad != v:
+        logits = jnp.pad(logits, ((0, 0), (0, v_pad - v)),
+                         constant_values=NEG)
+    if mask_pad_words:
+        mask = jnp.pad(mask, ((0, 0), (0, mask_pad_words)))
+    elif mask.shape[1] != v_pad and mask.shape[1] == v:
+        mask = jnp.pad(mask, ((0, 0), (0, v_pad - v)))
+    return logits, mask, v_pad
 
 
 def _kernel(logits_ref, mask_ref, idx_ref, val_ref, m_scr, i_scr, *,
@@ -56,10 +87,9 @@ def masked_argmax_pallas(logits: jnp.ndarray, mask: jnp.ndarray,
                          interpret: bool = True):
     """logits (B, V) float, mask (B, V) int8/bool -> (idx (B,), val (B,))."""
     b, v = logits.shape
-    if v % block_v != 0:
-        block_v = v  # fall back to one tile (v assumed modest) — still fused
-    n_blocks = v // block_v
-    mask = mask.astype(jnp.int8)
+    block_v = min(block_v, -(-v // WORD_BITS) * WORD_BITS)
+    logits, mask, v_pad = _pad_tail(logits, mask.astype(jnp.int8), block_v)
+    n_blocks = v_pad // block_v
     kernel = functools.partial(_kernel, block_v=block_v, n_blocks=n_blocks)
     return pl.pallas_call(
         kernel,
@@ -82,3 +112,80 @@ def masked_argmax_pallas(logits: jnp.ndarray, mask: jnp.ndarray,
         ],
         interpret=interpret,
     )(logits, mask)
+
+
+def _kernel_packed(logits_ref, bits_ref, idx_ref, val_ref, m_scr, i_scr, *,
+                   block_v: int, n_blocks: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[0, 0] = jnp.float32(NEG)
+        i_scr[0, 0] = 0
+
+    bw = block_v // WORD_BITS
+    # in-register unpack: token (w, b) of this tile is bit b (LSB first)
+    # of word w — broadcast each word across the 32 lanes it governs,
+    # shift by the lane's bit position, AND 1
+    words = bits_ref[...].reshape(bw, 1)                   # (BW, 1) u32
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (bw, WORD_BITS), 1)
+    bit = (jnp.broadcast_to(words, (bw, WORD_BITS)) >> shifts) \
+        & jnp.uint32(1)
+    logits = logits_ref[...].astype(jnp.float32).reshape(bw, WORD_BITS)
+    masked = jnp.where(bit != 0, logits, NEG)
+    local_max = jnp.max(masked)
+    # ties to the LOWEST flat index == first argmax occurrence
+    flat = (jax.lax.broadcasted_iota(jnp.int32, (bw, WORD_BITS), 0)
+            * WORD_BITS
+            + jax.lax.broadcasted_iota(jnp.int32, (bw, WORD_BITS), 1))
+    local_arg = jnp.min(jnp.where(masked == local_max, flat, block_v)) \
+        + j * block_v
+
+    best = m_scr[0, 0]
+    take = local_max > best
+    m_scr[0, 0] = jnp.where(take, local_max, best)
+    i_scr[0, 0] = jnp.where(take, local_arg, i_scr[0, 0])
+
+    @pl.when(j == n_blocks - 1)
+    def _done():
+        idx_ref[0] = i_scr[0, 0]
+        val_ref[0] = m_scr[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_v", "interpret"))
+def masked_argmax_pallas_packed(logits: jnp.ndarray, bits: jnp.ndarray,
+                                block_v: int = 2048,
+                                interpret: bool = True):
+    """logits (B, V) float, bits (B, ceil(V/32)) uint32 (bitmask layout,
+    tail bits past V zero) -> (idx (B,), val (B,))."""
+    b, v = logits.shape
+    assert block_v % WORD_BITS == 0, block_v
+    block_v = min(block_v, -(-v // WORD_BITS) * WORD_BITS)
+    n_blocks = -(-v // block_v)
+    pad_words = n_blocks * (block_v // WORD_BITS) - bits.shape[1]
+    logits, bits, v_pad = _pad_tail(logits, bits, block_v,
+                                    mask_pad_words=pad_words)
+    kernel = functools.partial(_kernel_packed, block_v=block_v,
+                               n_blocks=n_blocks)
+    bw = block_v // WORD_BITS
+    return pl.pallas_call(
+        kernel,
+        grid=(b, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, block_v), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bw), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(logits, bits)

@@ -4,12 +4,20 @@
 to the interpreted kernel (CPU validation) elsewhere; ``use_ref=True``
 selects the unfused jnp oracle (the baseline the §Perf analysis compares
 against).
+
+The mask operand picks the kernel layout by dtype: uint32 means a packed
+``(B, ceil(V/32))`` bitset row (``core/bitmask.py`` wire format, unpacked
+in-register by the kernel); anything else is the legacy ``(B, V)``
+int8/bool mask.  Both layouts are bitwise-identical in output — asserted
+by the parity tests and by ``benchmarks/mask_bench.py``.
 """
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
-from repro.kernels.masked_sample.kernel import masked_argmax_pallas
+from repro.kernels.masked_sample.kernel import (masked_argmax_pallas,
+                                                masked_argmax_pallas_packed)
 from repro.kernels.masked_sample.ref import masked_argmax_ref
 
 
@@ -17,5 +25,8 @@ def masked_argmax(logits, mask, use_ref: bool = False, block_v: int = 2048):
     if use_ref:
         return masked_argmax_ref(logits, mask)
     on_tpu = jax.default_backend() == "tpu"
+    if jnp.asarray(mask).dtype == jnp.uint32:
+        return masked_argmax_pallas_packed(logits, mask, block_v=block_v,
+                                           interpret=not on_tpu)
     return masked_argmax_pallas(logits, mask, block_v=block_v,
                                 interpret=not on_tpu)

@@ -5,13 +5,28 @@ import jax
 import jax.numpy as jnp
 
 NEG = jnp.float32(-1e30)
+WORD_BITS = 32
+
+
+def unpack_bits(bits: jnp.ndarray, v: int) -> jnp.ndarray:
+    """Packed (..., ceil(v/32)) uint32 -> bool (..., v) (bitmask layout:
+    bit b of word w, LSB first, is token w*32+b)."""
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    expanded = (bits[..., :, None] >> shifts) & jnp.uint32(1)
+    flat = expanded.reshape(bits.shape[:-1]
+                            + (bits.shape[-1] * WORD_BITS,))
+    return flat[..., :v] != 0
 
 
 def masked_argmax_ref(logits: jnp.ndarray, mask: jnp.ndarray):
-    """logits (B, V), mask (B, V) -> (idx (B,) int32, val (B,) float32).
+    """logits (B, V), mask (B, V) int8/bool or packed (B, ceil(V/32))
+    uint32 -> (idx (B,) int32, val (B,) float32).
 
     The unfused baseline: materializes the masked logits then reduces.
     """
+    mask = jnp.asarray(mask)
+    if mask.dtype == jnp.uint32:
+        mask = unpack_bits(mask, logits.shape[-1])
     masked = jnp.where(mask != 0, logits.astype(jnp.float32), NEG)
     idx = jnp.argmax(masked, axis=-1).astype(jnp.int32)
     val = jnp.max(masked, axis=-1)

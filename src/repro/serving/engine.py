@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import bitmask
 from repro.core.baselines import OnlineParserDecoder, TemplateSession
 from repro.core.domino import DominoDecoder
 from repro.core.grammar import Grammar
@@ -171,7 +172,9 @@ class ServingEngine:
         silently emitting grammar-violating output.  ``premask`` is a mask
         the caller already built from the checker's current state (e.g.
         the scheduler's host/device-overlapped prebuild); its build time
-        was accounted at build site, so it does not count here.
+        was accounted at build site, so it does not count here.  A packed
+        uint32 premask (the scheduler's native row format) is unpacked
+        here — selection below wants the bool view.
         """
         if checker is None:
             return self._select(logits, None), 0, 0.0
@@ -184,6 +187,8 @@ class ServingEngine:
             if ok:
                 return cand, 0, mask_t
         if premask is not None:
+            if premask.dtype == np.uint32:
+                premask = bitmask.unpack(premask, self._v)
             mask = premask
         else:
             t0 = time.perf_counter()
@@ -348,6 +353,7 @@ class ServingEngine:
             wall_time_s=time.perf_counter() - t_start,
             finished=finished,
             dead_end=dead_end,
+            mask_cache_hits=getattr(checker, "n_mask_memo_hits", 0),
         )
 
     # -- batched serving -------------------------------------------------------------

@@ -16,8 +16,17 @@ Design points (ISSUE 1 tentpole):
    instead of one per distinct prompt length;
  - every decode step runs ONE batched forward over all slots; grammar
    masks are applied device-side through the fused
-   ``kernels/masked_sample`` Pallas op (host only ships the (B, V) bit
-   mask and reads back (B,) token ids);
+   ``kernels/masked_sample`` Pallas op.  Masks are PACKED end to end
+   (ISSUE 4 tentpole): checkers assemble a ``ceil(V/32)``-word uint32
+   bitset by OR-ing precomputed tree-node segments (memoized per
+   immutable grammar state on the shared TreeCache — a recurring state
+   is a dict lookup, counted in ``mask_cache_hits``), the scheduler
+   stages rows into ONE persistent ``(capacity, ceil(V/32))`` uint32
+   buffer (zero per-tick allocation; vacant slots keep a precomputed
+   sentinel word row), and the kernel unpacks words in-register fused
+   with the argmax — so the host ships V/8 mask bytes per slot per tick
+   (8x less than the old (B, V) int8 staging array) and reads back (B,)
+   token ids;
  - the forward is dispatched asynchronously and the host builds the NEXT
    step's grammar masks while the device executes (ISSUE 2 tentpole):
    mask_time moves off the step critical path — it still accrues
@@ -64,6 +73,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import bitmask
 from repro.kernels.masked_sample.ops import masked_argmax
 from repro.models import kvcache
 from repro.serving.session import GenerationResult, Session
@@ -295,9 +305,20 @@ class ContinuousBatchingScheduler:
         vpad = engine.model.padded_vocab
         self._logits = jnp.zeros((self.capacity, vpad), jnp.float32)
         self._raw_argmax = jax.jit(lambda lg: jnp.argmax(lg, axis=-1))
-        # masks prebuilt from each slot's current checker state while the
-        # device executed the previous forward; dropped on any checker
-        # advance / slot turnover (state changed -> mask stale)
+        # persistent packed mask staging buffer: one (capacity, V/32)
+        # uint32 row per slot, reused every tick (no per-tick (B, V) int8
+        # allocation, 8x fewer host->device mask bytes).  Vacant slots
+        # keep the precomputed sentinel row (token 0 legal — harmless,
+        # their logits row is garbage by contract anyway).
+        w = bitmask.n_words(engine._v)
+        self._sentinel_row = np.zeros(w, np.uint32)
+        bitmask.set_bit(self._sentinel_row, 0)
+        self._allow_all_row = bitmask.pack_bool(
+            np.ones(engine._v, bool))          # unconstrained rows
+        self._mask_words = np.tile(self._sentinel_row, (self.capacity, 1))
+        # packed masks prebuilt from each slot's current checker state
+        # while the device executed the previous forward; dropped on any
+        # checker advance / slot turnover (state changed -> mask stale)
         self._premask: Dict[int, np.ndarray] = {}
         # opportunistic-mode adaptive prebuild: build a slot's mask only
         # when its previous tick intervened (the O(token) legality check
@@ -306,6 +327,8 @@ class ContinuousBatchingScheduler:
         self._opp_intervened = np.zeros(self.capacity, bool)
         self.premask_hits = 0          # selections served by a prebuild
         self.premask_skips = 0         # prebuilds adaptively skipped
+        self.mask_cache_hits = 0       # mask builds served by the state-
+        #                                keyed memo on the shared TreeCache
         self.n_fwd = 0                 # global forward count (all slots)
         self.n_preempt = 0             # paged recompute preemptions
         self._next_rid = 0
@@ -522,6 +545,23 @@ class ContinuousBatchingScheduler:
 
     # -- mask pipeline ----------------------------------------------------------
 
+    def _checker_bits(self, sess: Session):
+        """Build ``sess``'s packed mask row, attributing build time to the
+        session and memo hits to ``mask_cache_hits``.  Checkers without a
+        ``mask_bits`` API (e.g. test stubs) fall back to packing their
+        bool mask."""
+        ch = sess.checker
+        before = getattr(ch, "n_mask_memo_hits", 0)
+        t0 = time.perf_counter()
+        if hasattr(ch, "mask_bits"):
+            m = ch.mask_bits()
+        else:
+            m = bitmask.pack_bool(np.asarray(ch.mask()))
+        dt = time.perf_counter() - t0
+        sess.mask_time += dt
+        self.mask_cache_hits += getattr(ch, "n_mask_memo_hits", 0) - before
+        return m, dt
+
     def _prebuild_masks(self):
         """Build the next selection's grammar masks from current checker
         state.  Called while the device executes the just-dispatched
@@ -547,10 +587,7 @@ class ContinuousBatchingScheduler:
                     and not self._opp_intervened[slot]:
                 self.premask_skips += 1
                 continue
-            t0 = time.perf_counter()
-            m = sess.checker.mask()
-            dt = time.perf_counter() - t0
-            sess.mask_time += dt
+            m, dt = self._checker_bits(sess)
             self._premask[slot] = m
             built.append((sess, dt))
         return built
@@ -564,16 +601,16 @@ class ContinuousBatchingScheduler:
         eng = self.eng
         v = eng._v
         raw = np.asarray(self._raw_argmax(self._logits))
-        masks = np.zeros((self.capacity, v), dtype=np.int8)
-        masks[:, 0] = 1                      # empty slots: harmless sentinel
-        row_mask_bool: Dict[int, Optional[np.ndarray]] = {}
+        masks = self._mask_words              # persistent staging buffer
+        row_bits: Dict[int, Optional[np.ndarray]] = {}
         for slot, sess in enumerate(self.slots):
             if sess is None:
+                masks[slot] = self._sentinel_row
                 continue
             ch = sess.checker
             if ch is None:
-                masks[slot, :] = 1
-                row_mask_bool[slot] = None
+                masks[slot] = self._allow_all_row
+                row_bits[slot] = None
                 continue
             if eng.cfg.opportunistic and eng.cfg.temperature <= 0.0:
                 t0 = time.perf_counter()
@@ -582,26 +619,24 @@ class ContinuousBatchingScheduler:
                 if ok:
                     self._opp_intervened[slot] = False
                     masks[slot, :] = 0
-                    masks[slot, raw[slot]] = 1
-                    row_mask_bool[slot] = None
+                    bitmask.set_bit(masks[slot], int(raw[slot]))
+                    row_bits[slot] = None
                     continue
                 # fast path lost: a full mask is needed this tick, so
                 # next tick's prebuild is worth building again
                 self._opp_intervened[slot] = True
             m = self._premask.pop(slot, None)   # overlapped prebuild
             if m is None:
-                t0 = time.perf_counter()
-                m = ch.mask()
-                sess.mask_time += time.perf_counter() - t0
+                m, _dt = self._checker_bits(sess)
             else:
                 self.premask_hits += 1
             if not m.any():
                 sess.dead_end = True
                 self._finish(sess)
+                masks[slot] = self._sentinel_row
                 continue
-            masks[slot, :] = 0
-            masks[slot, m] = 1
-            row_mask_bool[slot] = m
+            masks[slot] = m
+            row_bits[slot] = m
         occupied = [i for i, s in enumerate(self.slots) if s is not None]
         if not occupied:
             return {}
@@ -612,8 +647,10 @@ class ContinuousBatchingScheduler:
             lg_host = np.asarray(self._logits)[:, :v]
             toks = np.zeros(self.capacity, np.int64)
             for slot in occupied:
-                m = row_mask_bool.get(slot)
-                toks[slot] = eng._select(lg_host[slot], m)
+                m = row_bits.get(slot)
+                toks[slot] = eng._select(
+                    lg_host[slot],
+                    None if m is None else bitmask.unpack(m, v))
         out: Dict[int, int] = {}
         for slot in occupied:
             sess = self.slots[slot]
@@ -799,8 +836,14 @@ class ContinuousBatchingScheduler:
                 if not (eng.cfg.opportunistic
                         and eng.cfg.temperature <= 0.0):
                     self.premask_hits += int(pre is not None)
+                hits0 = getattr(ch, "n_mask_memo_hits", 0)
                 tok_i, intervened, mask_dt = eng._pick(lg_row[i], ch,
                                                        premask=pre)
+                # _pick may have built a full mask (memo-eligible):
+                # keep the scheduler aggregate consistent with the
+                # per-session checker counters
+                self.mask_cache_hits += \
+                    getattr(ch, "n_mask_memo_hits", 0) - hits0
                 sess.mask_time += mask_dt
                 if tok_i is None:          # dead end mid-verification
                     sess.dead_end = True

@@ -32,6 +32,10 @@ class GenerationResult:
     # mask_time_s - mask_overlap_s is what actually sat on the critical
     # path
     mask_overlap_s: float = 0.0
+    # full-mask builds served by the state-keyed memo on the shared
+    # TreeCache (recurring grammar states are a dict lookup instead of a
+    # tree walk) — the packed-mask analogue of premask_hits
+    mask_cache_hits: int = 0
     # times this request was recompute-preempted by the paged-KV
     # scheduler (pages reclaimed under pool pressure, prompt + generated
     # prefix re-prefilled on re-admission)
@@ -90,6 +94,7 @@ class Session:
             n_spec_accepted=self.n_acc,
             mask_time_s=self.mask_time,
             mask_overlap_s=self.mask_overlap,
+            mask_cache_hits=getattr(self.checker, "n_mask_memo_hits", 0),
             n_preemptions=self.n_preempt,
             model_time_s=self.model_time,
             wall_time_s=self.t_finish - self.t_submit,

@@ -13,28 +13,40 @@ from repro.kernels.decode_attention.ops import decode_attention
 from repro.kernels.decode_attention.ref import decode_attention_ref
 from repro.kernels.mamba_scan.ops import mamba_scan
 from repro.kernels.mamba_scan.ref import mamba_scan_ref
+from repro.core import bitmask
 from repro.kernels.masked_sample.ops import masked_argmax
 from repro.kernels.masked_sample.ref import masked_argmax_ref
 
 RNG = np.random.default_rng(42)
 
 
+# odd V (tail tiles padded, not collapsed to one whole-V VMEM tile) and
+# packed uint32 masks ride the same sweep as the original shapes
 @pytest.mark.parametrize("b,v,bv", [(1, 512, 128), (4, 8192, 2048),
-                                    (2, 1000, 2048), (3, 4096, 512)])
+                                    (2, 1000, 2048), (3, 4096, 512),
+                                    (2, 4100, 2048), (1, 333, 128),
+                                    (2, 262144, 2048)])
 @pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
-def test_masked_argmax(b, v, bv, dtype):
+@pytest.mark.parametrize("packed", [False, True])
+def test_masked_argmax(b, v, bv, dtype, packed):
     logits = jnp.asarray(RNG.normal(size=(b, v)), dtype=dtype)
-    mask = jnp.asarray((RNG.random((b, v)) < 0.02).astype(np.int8))
-    mask = mask.at[:, v // 3].set(1)
+    mask_np = RNG.random((b, v)) < 0.02
+    mask_np[:, v // 3] = True
+    mask = jnp.asarray(bitmask.pack_bool(mask_np)) if packed \
+        else jnp.asarray(mask_np.astype(np.int8))
     i1, v1 = masked_argmax(logits, mask, block_v=bv)
-    i2, v2 = masked_argmax_ref(logits, mask)
+    i2, v2 = masked_argmax_ref(logits, jnp.asarray(mask_np.astype(np.int8)))
     np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
     np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-6)
 
 
-def test_masked_argmax_respects_mask():
+@pytest.mark.parametrize("packed", [False, True])
+def test_masked_argmax_respects_mask(packed):
     logits = jnp.asarray(RNG.normal(size=(2, 256)).astype(np.float32)) + 10
-    mask = jnp.zeros((2, 256), jnp.int8).at[:, 5].set(1)
+    mask_np = np.zeros((2, 256), np.int8)
+    mask_np[:, 5] = 1
+    mask = jnp.asarray(bitmask.pack_bool(mask_np)) if packed \
+        else jnp.asarray(mask_np)
     i, _ = masked_argmax(logits, mask, block_v=64)
     assert list(np.asarray(i)) == [5, 5]
 
