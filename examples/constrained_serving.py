@@ -1,9 +1,14 @@
 """End-to-end driver (deliverable b): TRAIN a small model on the
-arithmetic-JSON task, then SERVE a batch of requests under the GSM8K-JSON
-schema with every constraint mode — concurrently, through the
-continuous-batching scheduler (slot reuse + device-side masking) —
-reporting accuracy and speculation gains: the paper's Table 2/3 pipeline
-in one script.
+arithmetic-JSON task, then SERVE batches of requests under the GSM8K-JSON
+schema through the continuous-batching scheduler, reporting accuracy and
+speculation gains: the paper's Table 2/3 pipeline in one script.
+
+Uses the per-request constraint API throughout: ONE ``ServingEngine`` (one
+KV pool, one grammar registry) serves every constraint mode — each mode is
+just a different ``ConstraintSpec``/``DecodeParams`` on the ``Request`` —
+and the final section submits a MIXED workload (schema-constrained,
+plain-JSON-constrained, and unconstrained rows concurrently in the same
+batch).
 
   PYTHONPATH=src python examples/constrained_serving.py [--steps 200]
 """
@@ -22,7 +27,8 @@ from repro.configs.base import ModelConfig  # noqa: E402
 from repro.core import grammars  # noqa: E402
 from repro.core.sampling import GrammarSampler  # noqa: E402
 from repro.models import build_model  # noqa: E402
-from repro.serving import EngineConfig, ServingEngine  # noqa: E402
+from repro.serving import (ConstraintSpec, DecodeParams,  # noqa: E402
+                           Request, ServingEngine)
 from repro.tokenizer import train_bpe  # noqa: E402
 from repro.training import optimizer as opt  # noqa: E402
 from repro.training.data import (TaskDataset, evaluate_answer,  # noqa: E402
@@ -63,34 +69,39 @@ def main() -> None:
             print(f"train step {i:4d} loss={float(metrics['loss']):.3f} "
                   f"({time.perf_counter()-t0:.0f}s)", flush=True)
 
-    # ---- serve the requests concurrently under each mode ---------------------
-    # the continuous-batching scheduler keeps --slots decode rows busy:
-    # finished requests free their slot and the next prompt is admitted
+    # ---- ONE engine, a grammar registry, per-request constraints -------------
+    eng = ServingEngine(model, params, tok, max_len=1024)
+    eng.register_grammar("gsm8k", g)
+    eng.register_grammar("json", grammars.load("json"))
+    # off the timed path: tree precomputation (Algorithm 2) for EVERY
+    # registered grammar, jit compiles, and the count model
+    eng.precompute()
+
     rng = random.Random(4)
     problems = [make_task_example(rng, n_steps=1)
                 for _ in range(args.problems)]
     shots = few_shot_prefix(random.Random(5), 2)
-    for mode, ecfg in [
-        ("unconstrained", EngineConfig(mode="unconstrained", max_tokens=64)),
-        ("naive(k=0)", EngineConfig(mode="naive", max_tokens=64)),
-        ("domino(k=inf)", EngineConfig(mode="domino", max_tokens=64)),
-        ("domino+spec(s=8)", EngineConfig(mode="domino", speculative=True,
-                                          spec_s=8, spec_threshold=0.4,
-                                          max_tokens=64)),
-    ]:
-        eng = ServingEngine(model, params, tok,
-                            None if mode == "unconstrained" else g,
-                            ecfg, max_len=1024)
-        # off the timed path: tree precomputation (Algorithm 2), jit
-        # compiles (admission prefill compiles once per distinct prompt
-        # length, so warm on the full prompt set), and the count model
-        eng.precompute()
-        eng.generate_batch([shots + ex.prompt for ex in problems],
-                           max_batch=args.slots)
+    prompts = [shots + ex.prompt for ex in problems]
+
+    def serve(reqs):
+        reqs = list(reqs)
+        eng.generate_batch(reqs, max_batch=args.slots)   # warm compiles
         t0 = time.perf_counter()
-        results = eng.generate_batch(
-            [shots + ex.prompt for ex in problems], max_batch=args.slots)
-        wall = time.perf_counter() - t0
+        results = eng.generate_batch(reqs, max_batch=args.slots)
+        return results, time.perf_counter() - t0
+
+    # every mode is a per-request policy on the SAME engine / KV pool
+    for name, spec, dp in [
+        ("unconstrained", ConstraintSpec(), DecodeParams(max_tokens=64)),
+        ("naive(k=0)", ConstraintSpec(grammar="gsm8k", mode="naive"),
+         DecodeParams(max_tokens=64)),
+        ("domino(k=inf)", ConstraintSpec(grammar="gsm8k", mode="domino"),
+         DecodeParams(max_tokens=64)),
+        ("domino+spec(s=8)", ConstraintSpec(grammar="gsm8k", mode="domino"),
+         DecodeParams(max_tokens=64, speculative=True, spec_s=8,
+                      spec_threshold=0.4)),
+    ]:
+        results, wall = serve(Request(p, spec, dp) for p in prompts)
         acc = wf = fwd = toks = 0
         for ex, r in zip(problems, results):
             fwd += r.n_forward_passes
@@ -98,10 +109,30 @@ def main() -> None:
             v = evaluate_answer(r.text)
             wf += int(v is not None)
             acc += int(v == ex.answer_value)
-        print(f"{mode:18s} accuracy={acc}/{len(problems)} "
+        print(f"{name:18s} accuracy={acc}/{len(problems)} "
               f"well-formed={wf}/{len(problems)} "
               f"tokens/forward={toks/fwd:.2f} "
               f"{toks/wall:.1f} tok/s ({args.slots} slots)", flush=True)
+
+    # ---- mixed-grammar workload: one batch, three traffic classes ------------
+    mixed_specs = [ConstraintSpec(grammar="gsm8k", mode="domino"),
+                   ConstraintSpec(grammar="json", mode="domino"),
+                   ConstraintSpec()]
+    mixed = [Request(p, mixed_specs[i % len(mixed_specs)],
+                     DecodeParams(max_tokens=64))
+             for i, p in enumerate(prompts)]
+    results, wall = serve(mixed)
+    toks = sum(max(1, r.n_tokens) for r in results)
+    by_class = {}
+    for i, r in enumerate(results):
+        key = ["gsm8k", "json", "free"][i % len(mixed_specs)]
+        by_class.setdefault(key, []).append(r)
+    detail = " ".join(
+        f"{k}:{sum(int(evaluate_answer(r.text) is not None) for r in rs)}"
+        f"/{len(rs)}-wf" for k, rs in by_class.items())
+    print(f"{'mixed batch':18s} {toks/wall:.1f} tok/s "
+          f"({args.slots} slots; gsm8k+json+unconstrained rows "
+          f"concurrently; {detail})", flush=True)
 
 
 if __name__ == "__main__":

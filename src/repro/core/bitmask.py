@@ -63,6 +63,26 @@ def set_bit(words: np.ndarray, tok: int) -> None:
     words[tok >> 5] |= np.uint32(1) << np.uint32(tok & 31)
 
 
+def get_bit(words: np.ndarray, tok: int) -> bool:
+    """Test one token's bit in a packed row."""
+    return bool((words[tok >> 5] >> np.uint32(tok & 31)) & np.uint32(1))
+
+
+def to_ids(words: np.ndarray, v: int) -> np.ndarray:
+    """Packed (W,) uint32 row -> ascending token ids of the set bits.
+
+    Only nonzero words are expanded, so sparse masks (the common grammar
+    case) cost O(set words * 32), not O(V).
+    """
+    idx = np.nonzero(words)[0]
+    if idx.size == 0:
+        return np.empty(0, np.int64)
+    bits = (words[idx, None] >> _SHIFTS) & np.uint32(1)
+    r, c = np.nonzero(bits)            # row-major: ascending token order
+    ids = (idx[r].astype(np.int64) << 5) + c
+    return ids[ids < v]
+
+
 def unpack(words: np.ndarray, v: int) -> np.ndarray:
     """Packed (..., W) uint32 -> bool (..., v)."""
     words = np.asarray(words, np.uint32)

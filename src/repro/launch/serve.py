@@ -1,8 +1,13 @@
 """Constrained-serving driver: loads (or trains) a small model and serves
-batched requests under a grammar with the selected constraint mode.
+batched requests through the per-request constraint API.
+
+``--grammar`` takes a comma-separated list ("none" = unconstrained rows);
+every listed grammar is registered on ONE engine's grammar registry and
+the prompts cycle through them, so a single continuous batch carries
+mixed-grammar traffic:
 
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --smoke \
-      --grammar json --mode domino --speculative --prompts 4
+      --grammar json,c,none --mode domino --prompts 6
 """
 import argparse
 
@@ -11,7 +16,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm-1.6b")
     ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--grammar", default="json")
+    ap.add_argument("--grammar", default="json",
+                    help="comma-separated grammar names cycled across "
+                         "prompts; 'none' entries serve unconstrained rows")
     ap.add_argument("--mode", default="domino",
                     choices=["unconstrained", "domino", "naive", "online"])
     ap.add_argument("--k", type=int, default=-1, help="-1 = infinity")
@@ -20,6 +27,9 @@ def main() -> None:
     ap.add_argument("--spec-s", type=int, default=8)
     ap.add_argument("--max-tokens", type=int, default=64)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="per-request sampling seed base (request i uses "
+                         "seed+i)")
     ap.add_argument("--prompts", type=int, default=2)
     ap.add_argument("--slots", type=int, default=4,
                     help="continuous-batching decode slots")
@@ -47,11 +57,13 @@ def main() -> None:
     from repro.core import grammars
     from repro.core.sampling import GrammarSampler
     from repro.models import build_model
-    from repro.serving import EngineConfig, ServingEngine
+    from repro.serving import (ConstraintSpec, DecodeParams, Request,
+                               ServingEngine)
     from repro.tokenizer import BPETokenizer, train_bpe
     from repro.training import checkpoint
 
-    g = grammars.load(args.grammar)
+    gnames = [n.strip() for n in args.grammar.split(",") if n.strip()]
+    loaded = {n: grammars.load(n) for n in gnames if n != "none"}
     cfg = get_config(args.arch, smoke=True)
     if args.checkpoint:
         import os
@@ -63,7 +75,11 @@ def main() -> None:
         params, _, _ = checkpoint.load(
             args.checkpoint, model.init(jax.random.PRNGKey(0)))
     else:
-        corpus = GrammarSampler(g, seed=0).corpus(200)
+        corpus = b""
+        for i, g in enumerate(loaded.values() or
+                              [grammars.load("json")]):
+            corpus += GrammarSampler(g, seed=i).corpus(
+                200 // max(1, len(loaded)))
         tok = train_bpe(corpus, vocab_size=400)
         cfg = dataclasses.replace(cfg, vocab_size=tok.vocab_size,
                                   max_seq_len=4096)
@@ -73,32 +89,54 @@ def main() -> None:
     if args.kernels:
         cfg = dataclasses.replace(cfg, use_pallas_kernels=True)
         model = build_model(cfg)
-    ecfg = EngineConfig(
-        mode=args.mode, k=(None if args.k < 0 else args.k),
-        opportunistic=args.opportunistic, speculative=args.speculative,
-        spec_s=args.spec_s, temperature=args.temperature,
-        max_tokens=args.max_tokens)
-    engine = ServingEngine(model, params, tok, g, ecfg, max_len=1024)
 
-    prompts = ["A person encoded as a JSON object: ",
-               "Results as JSON: ",
-               "Config: ",
-               "Data record: "][:args.prompts]
-    if len(prompts) > 1:
+    # ONE engine, one KV pool: constraints ride on each Request
+    engine = ServingEngine(model, params, tok, max_len=1024)
+    for name, g in loaded.items():
+        engine.register_grammar(name, g)
+    engine.precompute()                 # warm every registered grammar
+
+    decode = DecodeParams(
+        temperature=args.temperature, max_tokens=args.max_tokens,
+        speculative=args.speculative, spec_s=args.spec_s)
+    specs = []
+    for name in gnames:
+        if name == "none" or args.mode == "unconstrained":
+            specs.append(ConstraintSpec())
+        else:
+            specs.append(ConstraintSpec(
+                grammar=name, mode=args.mode,
+                k=(None if args.k < 0 else args.k),
+                opportunistic=args.opportunistic))
+
+    base_prompts = ["A person encoded as a JSON object: ",
+                    "Results: ",
+                    "Config: ",
+                    "Data record: "]
+    requests = [
+        Request(base_prompts[i % len(base_prompts)],
+                specs[i % len(specs)],
+                dataclasses.replace(decode, seed=args.seed + i))
+        for i in range(args.prompts)]
+    labels = [gnames[i % len(gnames)] for i in range(args.prompts)]
+
+    if len(requests) > 1:
         # continuous batching covers every arch (SSM/SWA rows are admitted
         # by exact-length prefill; speculation refeeds per row); pure
-        # full-attention/MLA stacks serve from a paged KV pool
-        print(f"[continuous batching: {len(prompts)} requests, "
-              f"{min(len(prompts), args.slots)} slots, "
+        # full-attention/MLA stacks serve from a paged KV pool; rows mix
+        # grammars/modes freely
+        print(f"[continuous batching: {len(requests)} requests "
+              f"({','.join(sorted(set(labels)))}), "
+              f"{min(len(requests), args.slots)} slots, "
               f"{'contiguous KV' if args.no_paged else 'paged KV'}]")
         results = engine.generate_batch(
-            prompts, max_batch=args.slots,
+            requests, max_batch=args.slots,
             paged=False if args.no_paged else None,
             page_size=args.page_size, n_pages=args.pool_pages)
     else:
-        results = [engine.generate(p) for p in prompts]
-    for p, r in zip(prompts, results):
-        print(f"--- prompt: {p!r}")
+        results = [engine.generate(r) for r in requests]
+    for lbl, req, r in zip(labels, requests, results):
+        print(f"--- prompt[{lbl}]: {req.prompt!r}")
         print(f"    out[{r.n_tokens} toks, {r.n_forward_passes} fwd, "
               f"{r.n_interventions} interventions, "
               f"spec {r.n_spec_accepted}/{r.n_spec_proposed}]: "

@@ -1,6 +1,8 @@
 from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.request import ConstraintSpec, DecodeParams, Request
 from repro.serving.scheduler import ContinuousBatchingScheduler
 from repro.serving.session import GenerationResult, Session
 
 __all__ = ["ServingEngine", "EngineConfig", "GenerationResult", "Session",
-           "ContinuousBatchingScheduler"]
+           "ContinuousBatchingScheduler", "ConstraintSpec", "DecodeParams",
+           "Request"]

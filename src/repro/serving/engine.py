@@ -1,6 +1,26 @@
 """Constrained serving engine — DOMINO integrated as a first-class feature.
 
-Modes (the rows of the paper's tables):
+The unit of work is a :class:`~repro.serving.request.Request`:
+``prompt + ConstraintSpec + DecodeParams``.  The engine itself owns no
+grammar and no decode policy — it owns a **grammar registry**:
+
+    engine = ServingEngine(model, params, tok)
+    engine.register_grammar("json", json_grammar)   # one shared TreeCache
+    engine.register_grammar("c", c_grammar)         # per grammar
+    engine.precompute()                             # warm ALL of them
+    r = engine.generate(Request(
+        "a config: ",
+        ConstraintSpec(grammar="json", mode="domino"),
+        DecodeParams(max_tokens=64)))
+
+Each registered grammar gets ONE shared ``TreeCache`` (subterminal trees +
+packed-mask memo) reused by every request that references it — sessions
+never build trees per request — and ``precompute()`` (paper Algorithm 2)
+warms every registered cache off the serving critical path.  A
+``ConstraintSpec`` may also carry a ``Grammar`` object directly; it is
+auto-registered on first use so repeats still share a cache.
+
+Constraint modes (the rows of the paper's tables), per request:
   unconstrained          plain decoding
   domino                 DOMINO masks, lookahead k (None = ∞, minimally
                          invasive); opportunistic masking optional
@@ -9,41 +29,69 @@ Modes (the rows of the paper's tables):
                          cost profile, identical masks to domino k=∞)
   template               GUIDANCE-style template programs (forced tokens)
 
-Speculation (§3.6): the grammar-state count model proposes up to ``s``
-tokens; ONE decode_step forward scores [pending || proposals]; the longest
-verified prefix commits.  Rollback is a cache-length rewind for full-
-attention/MLA archs; ring-buffer (SWA) and recurrent (SSM/hybrid) archs
-re-feed the accepted tokens from the pre-speculation cache (JAX arrays are
-immutable, so "snapshotting" the old cache is keeping a reference — free).
+Speculation (§3.6) is a per-request ``DecodeParams`` knob: the
+grammar-state count model (shared engine-wide, so priors learned by one
+request speed up the next) proposes up to ``s`` tokens; ONE decode_step
+forward scores [pending || proposals]; the longest verified prefix
+commits.  Rollback is a cache-length rewind for full-attention/MLA archs;
+ring-buffer (SWA) and recurrent (SSM/hybrid) archs re-feed the accepted
+tokens from the pre-speculation cache.
+
+Sampling is per-request: each request draws from its own
+``np.random.Generator`` seeded by ``DecodeParams.seed``, so a sampled
+request's output never depends on batch composition or admission order.
+
+Back-compat: the legacy surface — ``ServingEngine(model, params, tok,
+grammar, EngineConfig(...))`` plus ``generate("prompt")`` — still works
+token-for-token for greedy decoding (temperature 0, every existing test
+and table row).  The constructor grammar is registered under the name
+``"default"`` and the ``EngineConfig`` becomes the engine's
+default-``Request`` factory (:meth:`make_request`); a bare string
+anywhere a ``Request`` is accepted submits that default request.  One
+deliberate semantic change: sampled decoding reseeds per request (it
+used to consume a shared engine RNG that advanced across calls), so
+repeated identical sampled requests return identical output — pass a
+different ``DecodeParams.seed`` per request for best-of-n diversity.
 
 This module keeps the single-request fast path and the template baseline.
 Batched serving lives in ``serving/scheduler.py`` (continuous batching
-with slot reuse); ``generate_batch`` delegates to it.
+with slot reuse and per-row constraint routing); ``generate_batch``
+delegates to it.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bitmask
-from repro.core.baselines import OnlineParserDecoder, TemplateSession
-from repro.core.domino import DominoDecoder
+from repro.core.baselines import TemplateSession
 from repro.core.grammar import Grammar
 from repro.core.scanner import Scanner
 from repro.core.speculation import CountModel, Speculator
 from repro.core.trees import TreeCache
 from repro.models.model import Model
+from repro.serving.request import (ConstraintSpec, DecodeParams, Request,
+                                   packed_argmax, select_token)
 from repro.serving.session import GenerationResult
 from repro.tokenizer import BPETokenizer
+
+DEFAULT_GRAMMAR = "default"
 
 
 @dataclasses.dataclass
 class EngineConfig:
+    """Legacy engine-wide configuration.
+
+    Kept as a back-compat shim: it no longer freezes anything into the
+    engine — it is split into the engine's default ``ConstraintSpec`` +
+    ``DecodeParams`` (see :meth:`constraint_spec` / :meth:`decode_params`)
+    and applies only to requests submitted as bare strings.
+    """
     mode: str = "domino"              # unconstrained|domino|naive|online|template
     k: Optional[int] = None           # DOMINO lookahead (None = ∞)
     opportunistic: bool = False
@@ -57,6 +105,34 @@ class EngineConfig:
     # the stripped text as a generation prefix (bridge tokens across the
     # prompt boundary become available)
     heal: int = 0
+
+    def constraint_spec(self, grammar_ref) -> ConstraintSpec:
+        return ConstraintSpec(grammar=grammar_ref, mode=self.mode,
+                              k=self.k, opportunistic=self.opportunistic,
+                              heal=self.heal)
+
+    def decode_params(self) -> DecodeParams:
+        return DecodeParams(temperature=self.temperature,
+                            max_tokens=self.max_tokens, seed=self.seed,
+                            speculative=self.speculative,
+                            spec_s=self.spec_s,
+                            spec_threshold=self.spec_threshold)
+
+
+@dataclasses.dataclass
+class _RowPolicy:
+    """Selection policy for the single-request path (the scheduler passes
+    the Session itself, which exposes the same fields)."""
+    temperature: float
+    opportunistic: bool
+    decode: DecodeParams
+    _rng: Optional[np.random.Generator] = None
+
+    @property
+    def rng(self) -> np.random.Generator:
+        if self._rng is None:
+            self._rng = self.decode.make_rng()
+        return self._rng
 
 
 class ServingEngine:
@@ -72,16 +148,39 @@ class ServingEngine:
         self.grammar = grammar
         self.cfg = cfg or EngineConfig()
         self.max_len = max_len
-        self.rng = np.random.default_rng(self.cfg.seed)
+        # grammar registry: name -> (Grammar, shared TreeCache).  The
+        # cache slot may be None: the legacy constructor registers its
+        # grammar lazily when the default mode never consults trees, so
+        # an unconstrained/template engine does no tree work (old
+        # behavior) while per-request specs can still name "default"
+        self.registry: Dict[str, Tuple[Grammar, Optional[TreeCache]]] = {}
+        if grammar is not None:
+            if (cfg or EngineConfig()).mode in ("domino", "naive",
+                                                "online"):
+                self.register_grammar(DEFAULT_GRAMMAR, grammar,
+                                      tree_cache=tree_cache)
+            else:
+                self.registry[DEFAULT_GRAMMAR] = (grammar, None)
+        # engine defaults: what a bare-string submission decodes with
+        self.default_constraint = self.cfg.constraint_spec(
+            DEFAULT_GRAMMAR if grammar is not None else None)
+        self.default_decode = self.cfg.decode_params()
+        # back-compat attribute: the default grammar's shared cache (only
+        # when the default mode actually consumes trees, as before)
         if grammar is not None and self.cfg.mode in ("domino", "naive",
                                                      "online"):
-            self.tree_cache = tree_cache or TreeCache(
-                Scanner(grammar), list(tok.vocab))
+            self.tree_cache = self.registry[DEFAULT_GRAMMAR][1]
         else:
             self.tree_cache = None
-        self.speculator = Speculator(
-            count_model, s=self.cfg.spec_s,
-            threshold=self.cfg.spec_threshold) if self.cfg.speculative else None
+        # speculation: ONE count model engine-wide (priors transfer across
+        # requests); Speculator instances are pooled per (s, threshold) so
+        # identical knobs share the proposal-chain memo
+        self.count_model = count_model or CountModel()
+        self._speculators: Dict[Tuple[int, float], Speculator] = {}
+        self.speculator = self._speculator_for(self.default_decode)
+        # engine-level rng: used only by the template baseline (which has
+        # no Request); request sampling is per-session
+        self.rng = np.random.default_rng(self.cfg.seed)
         self._v = tok.vocab_size   # model logits may be vocab-padded
         # jit'd steps (compiled once per (batch, s) shape)
         self._prefill = jax.jit(self.model.prefill)
@@ -95,125 +194,255 @@ class ServingEngine:
         head, reps, group, tail = self.model.cfg.layer_program
         return list(head) + list(group) + list(tail)
 
+    # -- grammar registry --------------------------------------------------------
+
+    def register_grammar(self, name: str, grammar: Grammar,
+                         tree_cache: Optional[TreeCache] = None
+                         ) -> TreeCache:
+        """Register ``grammar`` under ``name`` with ONE shared TreeCache
+        (subterminal trees + packed-mask memo).  Every request whose
+        ``ConstraintSpec.grammar == name`` builds its checker against
+        this cache — no per-request tree construction.  Re-registering a
+        name replaces its entry.  Returns the cache."""
+        tc = tree_cache if tree_cache is not None else TreeCache(
+            Scanner(grammar), list(self.tok.vocab))
+        self.registry[name] = (grammar, tc)
+        return tc
+
+    def resolve_grammar(self, ref) -> Tuple[Optional[Grammar],
+                                            Optional[TreeCache]]:
+        """Resolve a ConstraintSpec grammar reference to (grammar,
+        shared TreeCache).  Accepts a registered name, a Grammar object
+        (auto-registered keyed by identity so repeats share the cache),
+        or None."""
+        if ref is None:
+            return None, None
+        if isinstance(ref, str):
+            entry = self.registry.get(ref)
+            if entry is None:
+                raise KeyError(
+                    f"grammar {ref!r} is not registered (have: "
+                    f"{sorted(self.registry)}); call "
+                    f"engine.register_grammar({ref!r}, grammar) first")
+            if entry[1] is None:       # lazily-registered: build now
+                return entry[0], self.register_grammar(ref, entry[0])
+            return entry
+        # Grammar object: reuse an existing registration, else auto-add
+        for name, (g, tc) in self.registry.items():
+            if g is ref:
+                if tc is None:
+                    return g, self.register_grammar(name, g)
+                return g, tc
+        name = f"grammar@{id(ref):x}"
+        self.register_grammar(name, ref)
+        return self.registry[name]
+
     def precompute(self) -> Dict[str, float]:
-        """Offline warm path: build every reachable subterminal tree now
-        (paper Algorithm 2) so serving never constructs trees on the
-        critical path.  The TreeCache is shared across all sessions."""
-        if self.tree_cache is None:
-            return {"positions": 0.0, "seconds": 0.0}
-        return self.tree_cache.precompute()
+        """Offline warm path: build every reachable subterminal tree for
+        EVERY registered grammar now (paper Algorithm 2) so serving never
+        constructs trees on the critical path.  Each per-grammar
+        TreeCache is shared across all of that grammar's sessions."""
+        out = {"positions": 0.0, "seconds": 0.0}
+        for _g, tc in self.registry.values():
+            if tc is None:             # lazily registered, never resolved
+                continue
+            stats = tc.precompute()
+            out["positions"] += stats["positions"]
+            out["seconds"] += stats["seconds"]
+        return out
 
-    # -- checker factory ---------------------------------------------------------
+    # -- request / checker factory -----------------------------------------------
 
-    def _prep_request(self, prompt: str):
-        """Shared request preamble: encode, apply token healing (§3.5),
-        build the checker.  Both ``generate`` and the scheduler's
-        ``submit`` go through here so their outputs stay token-for-token
-        identical."""
-        prompt_ids = self.tok.encode(prompt) or [self.tok.bos_id]
-        heal_prefix = ""
-        if self.cfg.heal > 0 and len(prompt_ids) > self.cfg.heal:
-            from repro.core.healing import heal_prompt
-            prompt_ids, heal_prefix = heal_prompt(
-                prompt_ids, self.tok.vocab, n_strip=self.cfg.heal)
-        return prompt_ids, self._make_checker(heal_prefix)
-
-    def make_session(self, rid: int, prompt: str, extra_inputs=None):
-        """Create a scheduler :class:`~repro.serving.session.Session` for
-        ``prompt`` (used by ``ContinuousBatchingScheduler.submit``)."""
-        from repro.serving.session import Session
-        prompt_ids, checker = self._prep_request(prompt)
-        return Session(rid=rid, prompt=prompt, prompt_ids=prompt_ids,
-                       checker=checker, budget=self.cfg.max_tokens,
+    def make_request(self, prompt: str,
+                     constraint: Optional[ConstraintSpec] = None,
+                     decode: Optional[DecodeParams] = None,
+                     extra_inputs: Optional[Dict[str, Any]] = None
+                     ) -> Request:
+        """Default-``Request`` factory: unspecified parts come from the
+        legacy engine-level ``EngineConfig`` / constructor grammar, which
+        is how bare-string submissions keep their exact old behavior."""
+        return Request(prompt=prompt,
+                       constraint=constraint or self.default_constraint,
+                       decode=decode or self.default_decode,
                        extra_inputs=extra_inputs)
 
+    def _coerce(self, request: Union[str, Request]) -> Request:
+        return (self.make_request(request) if isinstance(request, str)
+                else request)
+
+    def _eos_for(self, spec: ConstraintSpec) -> int:
+        return spec.eos_id if spec.eos_id is not None else self.tok.eos_id
+
+    def _checker_from_spec(self, spec: ConstraintSpec,
+                           heal_prefix: str = ""):
+        grammar = tc = None
+        if spec.grammar is not None and spec.mode != "unconstrained":
+            grammar, tc = self.resolve_grammar(spec.grammar)
+        return spec.make_checker(grammar, list(self.tok.vocab),
+                                 self._eos_for(spec), tree_cache=tc,
+                                 heal_prefix=heal_prefix)
+
     def _make_checker(self, heal_prefix: str = ""):
-        mode = self.cfg.mode
-        if mode == "unconstrained" or self.grammar is None:
+        """Checker factory for the engine-DEFAULT constraint (kept as a
+        seam: tests monkeypatch it to inject checker stubs into both the
+        single-request and the scheduler path)."""
+        return self._checker_from_spec(self.default_constraint,
+                                       heal_prefix)
+
+    def _prep(self, req: Request):
+        """Shared request preamble: encode, apply token healing (§3.5),
+        build the checker from the grammar registry.  ``generate`` and
+        the scheduler's ``submit`` both go through here so their outputs
+        stay token-for-token identical."""
+        spec = req.constraint
+        prompt_ids = self.tok.encode(req.prompt) or [self.tok.bos_id]
+        prompt_ids, heal_prefix = spec.prep_prompt(prompt_ids,
+                                                   self.tok.vocab)
+        if spec is self.default_constraint:
+            checker = self._make_checker(heal_prefix)
+        else:
+            checker = self._checker_from_spec(spec, heal_prefix)
+        return prompt_ids, checker
+
+    def _prep_request(self, prompt: str):
+        """Back-compat alias: prep the engine-default request."""
+        return self._prep(self.make_request(prompt))
+
+    def make_session(self, rid: int, request: Union[str, Request],
+                     extra_inputs=None):
+        """Create a scheduler :class:`~repro.serving.session.Session`
+        carrying the request's full per-row decode policy (used by
+        ``ContinuousBatchingScheduler.submit``)."""
+        from repro.serving.session import Session
+        req = self._coerce(request)
+        prompt_ids, checker = self._prep(req)
+        dp = req.decode
+        # request-level side inputs first, call-level overrides on top
+        merged = dict(req.extra_inputs or {})
+        merged.update(extra_inputs or {})
+        return Session(rid=rid, prompt=req.prompt, prompt_ids=prompt_ids,
+                       checker=checker, budget=dp.max_tokens,
+                       eos_id=self._eos_for(req.constraint), decode=dp,
+                       opportunistic=req.constraint.opportunistic,
+                       speculator=self._speculator_for(dp), request=req,
+                       extra_inputs=merged or None)
+
+    def _speculator_for(self, dp: DecodeParams) -> Optional[Speculator]:
+        # speculation is greedy-verified: at temperature>0 proposals
+        # almost never match the sampled pick (no forward savings), and
+        # every mismatched verify position would burn a per-request RNG
+        # draw whose count depends on the SHARED count model's state —
+        # breaking the guarantee that a sampled request's output is
+        # independent of batch composition.  Sampled rows decode plain.
+        if not dp.speculative or dp.temperature > 0.0:
             return None
-        if mode == "domino" and heal_prefix:
-            from repro.core.healing import HealedDecoder
-            return HealedDecoder(self.grammar, list(self.tok.vocab),
-                                 self.tok.eos_id, heal_prefix,
-                                 k=self.cfg.k, tree_cache=self.tree_cache)
-        if mode == "domino":
-            return DominoDecoder(self.grammar, list(self.tok.vocab),
-                                 self.tok.eos_id, k=self.cfg.k,
-                                 tree_cache=self.tree_cache)
-        if mode == "naive":
-            return DominoDecoder(self.grammar, list(self.tok.vocab),
-                                 self.tok.eos_id, k=0,
-                                 tree_cache=self.tree_cache)
-        if mode == "online":
-            return OnlineParserDecoder(self.grammar, list(self.tok.vocab),
-                                       self.tok.eos_id,
-                                       tree_cache=self.tree_cache)
-        raise ValueError(mode)
+        key = (dp.spec_s, dp.spec_threshold)
+        sp = self._speculators.get(key)
+        if sp is None:
+            sp = Speculator(self.count_model, s=dp.spec_s,
+                            threshold=dp.spec_threshold)
+            self._speculators[key] = sp
+        return sp
 
     # -- sampling -----------------------------------------------------------------
 
-    def _select(self, logits: np.ndarray, mask: Optional[np.ndarray]) -> int:
-        lg = logits.astype(np.float64)
-        if mask is not None:
-            lg = np.where(mask, lg, -1e30)
-        if self.cfg.temperature <= 0.0:
-            return int(lg.argmax())
-        p = np.exp((lg - lg.max()) / self.cfg.temperature)
-        p = p / p.sum()
-        return int(self.rng.choice(len(p), p=p))
+    def _default_policy(self) -> _RowPolicy:
+        pol = _RowPolicy(temperature=self.cfg.temperature,
+                         opportunistic=self.cfg.opportunistic,
+                         decode=self.default_decode)
+        pol._rng = self.rng            # template/legacy path: engine rng
+        return pol
 
-    def _pick(self, logits: np.ndarray, checker, premask=None
-              ) -> Tuple[Optional[int], int, float]:
-        """Select the next token under the active constraint mode.
+    def _select(self, logits: np.ndarray, mask: Optional[np.ndarray],
+                policy=None) -> int:
+        pol = policy or self._default_policy()
+        return select_token(logits, mask, pol.temperature,
+                            pol.rng if pol.temperature > 0.0 else None)
 
-        Returns (token, intervened?, mask_seconds).  ``token`` is None when
-        the checker reached a dead end (no legal token, EOS included) —
-        callers surface this as ``GenerationResult.dead_end`` instead of
-        silently emitting grammar-violating output.  ``premask`` is a mask
-        the caller already built from the checker's current state (e.g.
-        the scheduler's host/device-overlapped prebuild); its build time
-        was accounted at build site, so it does not count here.  A packed
-        uint32 premask (the scheduler's native row format) is unpacked
-        here — selection below wants the bool view.
+    def _pick(self, logits: np.ndarray, checker, premask=None,
+              policy=None) -> Tuple[Optional[int], int, float]:
+        """Select the next token under the row's constraint + decode
+        policy (``policy``: a Session or _RowPolicy; None = engine
+        defaults).
+
+        Returns (token, intervened?, mask_seconds).  ``token`` is None
+        when the checker reached a dead end (no legal token, EOS
+        included) — callers surface this as ``GenerationResult.dead_end``
+        instead of silently emitting grammar-violating output.
+        ``premask`` is a mask the caller already built from the checker's
+        current state (e.g. the scheduler's host/device-overlapped
+        prebuild); its build time was accounted at build site, so it does
+        not count here.  Packed uint32 masks (the pipeline's native row
+        format) stay packed on the greedy branch — bit test on the
+        candidate + legal-id argmax — and are unpacked to bool only for
+        temperature>0 sampling.
         """
+        pol = policy or self._default_policy()
         if checker is None:
-            return self._select(logits, None), 0, 0.0
+            return self._select(logits, None, pol), 0, 0.0
         mask_t = 0.0
-        if self.cfg.opportunistic and self.cfg.temperature <= 0.0:
+        greedy = pol.temperature <= 0.0
+        if pol.opportunistic and greedy:
             cand = int(logits.argmax())
             t0 = time.perf_counter()
             ok = checker.check_token(cand)
             mask_t += time.perf_counter() - t0
             if ok:
                 return cand, 0, mask_t
+        bits = mask = None
         if premask is not None:
             if premask.dtype == np.uint32:
-                premask = bitmask.unpack(premask, self._v)
-            mask = premask
+                bits = premask
+            else:
+                mask = premask                 # bool premask (stub checkers)
+        elif greedy and hasattr(checker, "mask_bits"):
+            t0 = time.perf_counter()
+            bits = checker.mask_bits()
+            mask_t += time.perf_counter() - t0
         else:
             t0 = time.perf_counter()
             mask = checker.mask()
             mask_t += time.perf_counter() - t0
+        if bits is not None:
+            if greedy:
+                raw = int(logits.argmax())
+                if bitmask.get_bit(bits, raw):
+                    return raw, 0, mask_t      # legal argmax: no unpack
+                tok = packed_argmax(logits, bits, self._v)
+                if tok is None:
+                    # the checker invariant makes this unreachable for
+                    # sound grammars; report it rather than force EOS
+                    return None, 0, mask_t
+                return tok, 1, mask_t          # raw argmax was illegal
+            mask = bitmask.unpack(bits, self._v)   # sampling wants bool
         if not mask.any():
-            # the checker invariant makes this unreachable for sound
-            # grammars; if it happens, report it rather than force EOS
             return None, 0, mask_t
-        tok = self._select(logits, mask)
+        tok = self._select(logits, mask, pol)
         intervened = int(tok != int(logits.argmax()))
         return tok, intervened, mask_t
 
     # -- generation -----------------------------------------------------------------
 
-    def generate(self, prompt: str,
+    def generate(self, request: Union[str, Request],
                  extra_inputs: Optional[Dict[str, Any]] = None
                  ) -> GenerationResult:
+        """Serve one request on the single-request fast path.  ``request``
+        is a :class:`Request` or a bare prompt string (= the engine's
+        default request)."""
         t_start = time.perf_counter()
-        cfg = self.cfg
-        prompt_ids, checker = self._prep_request(prompt)
+        req = self._coerce(request)
+        dp = req.decode
+        eos_id = self._eos_for(req.constraint)
+        policy = _RowPolicy(temperature=dp.temperature,
+                            opportunistic=req.constraint.opportunistic,
+                            decode=dp)
+        speculator = self._speculator_for(dp)
+        prompt_ids, checker = self._prep(req)
         cache = self.model.init_cache(1, self.max_len)
         inputs = {"tokens": jnp.asarray([prompt_ids], jnp.int32)}
-        if extra_inputs:
-            inputs.update(extra_inputs)
+        # request-level side inputs first, call-level overrides on top
+        inputs.update(req.extra_inputs or {})
+        inputs.update(extra_inputs or {})
 
         model_t = 0.0
         mask_t = 0.0
@@ -231,31 +460,32 @@ class ServingEngine:
 
         finished = False
         dead_end = False
-        budget = cfg.max_tokens
+        budget = dp.max_tokens
         while budget > 0 and not finished and not dead_end:
             # ---- try speculative fast path -------------------------------------
-            if (self.speculator is not None and checker is not None
+            if (speculator is not None and checker is not None
                     and hasattr(checker, "clone")):
-                tok0, intervened, dt = self._pick(logits, checker)
+                tok0, intervened, dt = self._pick(logits, checker,
+                                                  policy=policy)
                 mask_t += dt
                 if tok0 is None:
                     dead_end = True
                     break
                 n_int += intervened
-                if tok0 == self.tok.eos_id:
+                if tok0 == eos_id:
                     finished = True
                     checker.advance(tok0)
                     break
-                self.speculator.observe(checker.state_key(), tok0)
+                speculator.observe(checker.state_key(), tok0)
                 checker.advance(tok0)
                 out_ids.append(tok0)
                 budget -= 1
-                proposals = self.speculator.propose(checker)
+                proposals = speculator.propose(checker)
                 n_prop += len(proposals)
                 feed = [tok0] + proposals
                 # static verify width (spec_s + 1): TPU-friendly single
                 # compiled program; pad positions are rolled back below
-                n_pad = (1 + self.cfg.spec_s) - len(feed)
+                n_pad = (1 + dp.spec_s) - len(feed)
                 feed_p = feed + [self.tok.pad_id] * n_pad
                 cache_before = cache
                 t0 = time.perf_counter()
@@ -274,7 +504,7 @@ class ServingEngine:
                     # proposal, an O(token) opportunistic legality check
                     # replaces the full tree-walk mask
                     tok_i = None
-                    if cfg.temperature <= 0.0 \
+                    if dp.temperature <= 0.0 \
                             and int(lg_multi[i].argmax()) == prop:
                         t0 = time.perf_counter()
                         ok = ch.check_token(prop)
@@ -282,7 +512,8 @@ class ServingEngine:
                         if ok:
                             tok_i = prop
                     if tok_i is None:
-                        tok_i, intervened, dt = self._pick(lg_multi[i], ch)
+                        tok_i, intervened, dt = self._pick(lg_multi[i], ch,
+                                                           policy=policy)
                         mask_t += dt
                         if tok_i is None:
                             dead_end = True
@@ -290,10 +521,10 @@ class ServingEngine:
                         n_int += intervened
                     if tok_i != prop:
                         break
-                    self.speculator.observe(ch.state_key(), tok_i)
+                    speculator.observe(ch.state_key(), tok_i)
                     ch.advance(tok_i)
                     accepted += 1
-                    if tok_i == self.tok.eos_id:
+                    if tok_i == eos_id:
                         finished = True
                         break
                     out_ids.append(tok_i)
@@ -320,7 +551,7 @@ class ServingEngine:
                 continue
 
             # ---- plain path ------------------------------------------------------
-            tok, intervened, dt = self._pick(logits, checker)
+            tok, intervened, dt = self._pick(logits, checker, policy=policy)
             mask_t += dt
             if tok is None:
                 dead_end = True
@@ -328,7 +559,7 @@ class ServingEngine:
             n_int += intervened
             if checker is not None:
                 checker.advance(tok)
-            if tok == self.tok.eos_id:
+            if tok == eos_id:
                 finished = True
                 break
             out_ids.append(tok)
@@ -358,26 +589,29 @@ class ServingEngine:
 
     # -- batched serving -------------------------------------------------------------
 
-    def generate_batch(self, prompts: List[str],
+    def generate_batch(self, requests: List[Union[str, Request]],
                        max_batch: Optional[int] = None,
                        paged: Optional[bool] = None,
                        page_size: Optional[int] = None,
                        n_pages: Optional[int] = None
                        ) -> List[GenerationResult]:
-        """Serve ``prompts`` through the continuous-batching scheduler.
+        """Serve ``requests`` (Requests or bare prompt strings) through
+        the continuous-batching scheduler.  Rows may mix grammars,
+        constraint modes, EOS ids, budgets and sampling policies freely —
+        each row decodes under its own ``ConstraintSpec``/``DecodeParams``.
 
-        ``max_batch`` caps the decode batch (slots); extra prompts wait in
-        the admission queue and reuse slots as earlier requests finish.
-        All architectures are supported: recurrent/ring rows are admitted
-        by exact-length prefill and speculation uses per-row refeed.
-        On pure full-attention/MLA stacks the KV cache is paged by
-        default (``paged``/``page_size``/``n_pages`` size the pool; an
+        ``max_batch`` caps the decode batch (slots); extra requests wait
+        in the admission queue and reuse slots as earlier requests
+        finish.  All architectures are supported: recurrent/ring rows are
+        admitted by exact-length prefill and speculation uses per-row
+        refeed.  On pure full-attention/MLA stacks the KV cache is paged
+        by default (``paged``/``page_size``/``n_pages`` size the pool; an
         undersized pool exerts admission backpressure instead of OOM).
         Call :meth:`precompute` first to keep tree construction off the
         serving critical path.
         """
         from repro.serving.scheduler import ContinuousBatchingScheduler
-        cap = min(len(prompts), max_batch) if max_batch else len(prompts)
+        cap = min(len(requests), max_batch) if max_batch else len(requests)
         kwargs = {}
         if paged is not None:
             kwargs["paged"] = paged
@@ -386,7 +620,7 @@ class ServingEngine:
         if n_pages is not None:
             kwargs["n_pages"] = n_pages
         sched = ContinuousBatchingScheduler(self, capacity=cap, **kwargs)
-        sessions = [sched.submit(p) for p in prompts]
+        sessions = [sched.submit(r) for r in requests]
         sched.run()
         return [s.result for s in sessions]
 

@@ -1,10 +1,25 @@
 """Continuous-batching constrained scheduler over a paged KV pool.
 
-Replaces the old lockstep ``generate_batch``: a fixed-capacity decode batch
-whose rows (KV "slots") are admitted and evicted independently.  Finished
-requests free their slot immediately and the next waiting request is
-prefilled into it, so the batch stays full under load instead of draining
-to the slowest request.
+A fixed-capacity decode batch whose rows (KV "slots") are admitted and
+evicted independently: finished requests free their slot immediately and
+the next waiting request is prefilled into it, so the batch stays full
+under load instead of draining to the slowest request.
+
+The unit of admission is a :class:`~repro.serving.request.Request` —
+``submit`` takes one (or a bare prompt string for the engine-default
+request) and every per-row policy rides on the resulting Session, never
+on an engine-global config.  One batch therefore freely mixes rows with
+different grammars (each row's checker walks its own grammar's shared
+TreeCache from the engine registry), different constraint modes
+(domino/naive/online/unconstrained — unconstrained rows stage the
+all-ones sentinel row in the same packed mask buffer), different EOS ids
+and token budgets (checked per row in the tick loop), different
+temperatures and seeds (greedy rows select through the fused device
+kernel; sampled rows draw host-side from their own per-request RNG), and
+different speculation knobs (the verify window is sized to the widest
+resident row's ``spec_s``; non-speculative rows just skip proposing).
+Per-row outputs are bitwise-identical to running each request alone on a
+single-grammar engine.
 
 Design points (ISSUE 1 tentpole):
  - admission prefills each request at B=1 and scatters the resulting row
@@ -55,8 +70,10 @@ Design points (ISSUE 1 tentpole):
    rows on SSM/SWA archs re-feed their accepted tokens from the
    pre-speculation cache — grouped by accepted length, so each group is
    one gather/decode/scatter round instead of a B=1 decode per row;
- - all sessions share the engine's TreeCache (and count model); call
-   ``warm()`` to run the offline ``precompute()`` pass before serving.
+ - sessions on the same grammar share that grammar's TreeCache (and all
+   sessions share the engine's count model); call ``warm()`` to run the
+   offline ``precompute()`` pass over every registered grammar before
+   serving.
 
 Token selection is identical to the single-request engine path at
 temperature 0 (greedy masked argmax, ties to the lowest index), so
@@ -67,7 +84,7 @@ from __future__ import annotations
 import collections
 import functools
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -76,6 +93,7 @@ import numpy as np
 from repro.core import bitmask
 from repro.kernels.masked_sample.ops import masked_argmax
 from repro.models import kvcache
+from repro.serving.request import Request, select_token
 from repro.serving.session import GenerationResult, Session
 
 
@@ -336,12 +354,18 @@ class ContinuousBatchingScheduler:
     # -- public API -------------------------------------------------------------
 
     def warm(self) -> Dict[str, float]:
-        """Run the offline tree precomputation (paper Algorithm 2) so mask
-        construction never lands on the serving critical path."""
+        """Run the offline tree precomputation (paper Algorithm 2) over
+        every grammar in the engine registry so mask construction never
+        lands on the serving critical path."""
         return self.eng.precompute()
 
-    def submit(self, prompt: str, extra_inputs=None) -> Session:
-        sess = self.eng.make_session(self._next_rid, prompt, extra_inputs)
+    def submit(self, request: Union[str, Request],
+               extra_inputs=None) -> Session:
+        """Queue one request.  ``request`` is a
+        :class:`~repro.serving.request.Request` (per-row grammar, mode,
+        EOS, budget, temperature, seed, speculation) or a bare prompt
+        string, which submits the engine-default request."""
+        sess = self.eng.make_session(self._next_rid, request, extra_inputs)
         self._next_rid += 1
         self.waiting.append(sess)
         return sess
@@ -361,12 +385,23 @@ class ContinuousBatchingScheduler:
         self._finished_now: List[Session] = []
         self._admit()
         if any(s is not None for s in self.slots):
-            if self.eng.speculator is not None:
-                self._spec_step()
+            width = self._verify_width()
+            if width > 1:
+                self._spec_step(width)
             else:
                 self._plain_step()
         self._reset_vacant_lens()
         return self._finished_now
+
+    def _verify_width(self) -> int:
+        """Speculative verify width for this tick: 1 + the widest
+        resident speculative row's ``spec_s`` (per-row policy — a batch
+        mixing speculative and plain rows sizes the window to the rows
+        that use it; plain rows ride along on pad positions).  1 means no
+        resident row speculates and the tick takes the plain path."""
+        widths = [1 + s.decode.spec_s for s in self.slots
+                  if s is not None and s.speculator is not None]
+        return max(widths) if widths else 1
 
     # -- admission / eviction ---------------------------------------------------
 
@@ -570,20 +605,18 @@ class ContinuousBatchingScheduler:
         once it knows whether the device actually outlasted the build.
         Returns [(session, build_seconds), ...] for that decision.
 
-        Under opportunistic checking the raw-argmax legality check
-        usually makes the mask dead weight, so the prebuild is skipped
-        for slots whose previous tick did NOT intervene — accounting
-        stays honest automatically: a skipped build adds no mask_time and
-        can earn no overlap credit."""
-        eng = self.eng
-        opportunistic = (eng.cfg.opportunistic
-                         and eng.cfg.temperature <= 0.0)
+        Under opportunistic checking (a per-ROW mode now) the raw-argmax
+        legality check usually makes the mask dead weight, so the
+        prebuild is skipped for opportunistic slots whose previous tick
+        did NOT intervene — accounting stays honest automatically: a
+        skipped build adds no mask_time and can earn no overlap credit."""
         built = []
         for slot, sess in enumerate(self.slots):
             if sess is None or sess.checker is None \
                     or slot in self._premask:
                 continue
-            if self.adaptive_prebuild and opportunistic \
+            if self.adaptive_prebuild and sess.opportunistic \
+                    and sess.temperature <= 0.0 \
                     and not self._opp_intervened[slot]:
                 self.premask_skips += 1
                 continue
@@ -595,9 +628,11 @@ class ContinuousBatchingScheduler:
     # -- token selection --------------------------------------------------------
 
     def _choose(self) -> Dict[int, int]:
-        """Pick one token per occupied slot (device-side masked argmax at
-        temperature 0).  Finishes dead-ended sessions; updates intervention
-        stats.  Returns {slot: token}."""
+        """Pick one token per occupied slot under that ROW's decode
+        policy: greedy rows go through the device-side fused masked
+        argmax over the shared packed staging buffer; sampled rows draw
+        host-side from their own per-request RNG.  Finishes dead-ended
+        sessions; updates intervention stats.  Returns {slot: token}."""
         eng = self.eng
         v = eng._v
         raw = np.asarray(self._raw_argmax(self._logits))
@@ -609,10 +644,12 @@ class ContinuousBatchingScheduler:
                 continue
             ch = sess.checker
             if ch is None:
+                # unconstrained row: the sentinel all-ones row shares the
+                # one (capacity, V/32) buffer with the grammar rows
                 masks[slot] = self._allow_all_row
                 row_bits[slot] = None
                 continue
-            if eng.cfg.opportunistic and eng.cfg.temperature <= 0.0:
+            if sess.opportunistic and sess.temperature <= 0.0:
                 t0 = time.perf_counter()
                 ok = ch.check_token(int(raw[slot]))
                 sess.mask_time += time.perf_counter() - t0
@@ -640,17 +677,21 @@ class ContinuousBatchingScheduler:
         occupied = [i for i, s in enumerate(self.slots) if s is not None]
         if not occupied:
             return {}
-        if eng.cfg.temperature <= 0.0:
+        toks = np.zeros(self.capacity, np.int64)
+        greedy = [s for s in occupied if self.slots[s].temperature <= 0.0]
+        if greedy:
             idx, _ = masked_argmax(self._logits[:, :v], jnp.asarray(masks))
-            toks = np.asarray(idx)
-        else:
+            toks[greedy] = np.asarray(idx)[greedy]
+        sampled = [s for s in occupied if s not in greedy]
+        if sampled:
             lg_host = np.asarray(self._logits)[:, :v]
-            toks = np.zeros(self.capacity, np.int64)
-            for slot in occupied:
+            for slot in sampled:
+                sess = self.slots[slot]
                 m = row_bits.get(slot)
-                toks[slot] = eng._select(
+                toks[slot] = select_token(
                     lg_host[slot],
-                    None if m is None else bitmask.unpack(m, v))
+                    None if m is None else bitmask.unpack(m, v),
+                    sess.temperature, sess.rng)
         out: Dict[int, int] = {}
         for slot in occupied:
             sess = self.slots[slot]
@@ -663,22 +704,21 @@ class ContinuousBatchingScheduler:
 
     def _commit_first(self, chosen: Dict[int, int]) -> Dict[int, int]:
         """Advance checkers / budgets for the chosen tokens; finish rows
-        that hit EOS or exhaust their budget.  Returns {slot: token} for
-        rows that still need a forward."""
-        eng = self.eng
+        that hit their OWN EOS id or exhaust their own budget.  Returns
+        {slot: token} for rows that still need a forward."""
         live: Dict[int, int] = {}
         for slot, tok in chosen.items():
             sess = self.slots[slot]
             ch = sess.checker
-            if tok == eng.tok.eos_id:
+            if tok == sess.eos_id:
                 if ch is not None:
                     ch.advance(tok)
                 sess.finished_eos = True
                 self._finish(sess)
                 continue
-            if ch is not None and eng.speculator is not None \
+            if ch is not None and sess.speculator is not None \
                     and hasattr(ch, "clone"):
-                eng.speculator.observe(ch.state_key(), tok)
+                sess.speculator.observe(ch.state_key(), tok)
             if ch is not None:
                 ch.advance(tok)
                 self._premask.pop(slot, None)   # state moved: mask stale
@@ -741,22 +781,27 @@ class ContinuousBatchingScheduler:
 
     # -- speculative decode tick (§3.6) -----------------------------------------
 
-    def _spec_step(self) -> None:
+    def _spec_step(self, width: int) -> None:
+        """One speculative tick.  ``width`` is 1 + the widest resident
+        row's ``spec_s`` (per-row policy): rows with shorter chains — or
+        no speculator at all — ride along on pad positions."""
         eng = self.eng
         pad = eng.tok.pad_id
         # reserve the full verify window up front: growing mid-tick could
         # preempt a row whose token was already committed into the feed
-        self._ensure_pages(1 + eng.cfg.spec_s)
+        self._ensure_pages(width)
         live = self._commit_first(self._choose())
         if not any(s is not None for s in self.slots):
             return
         proposals: Dict[int, List[int]] = {}
         for slot, tok in live.items():
-            ch = self.slots[slot].checker
+            sess = self.slots[slot]
+            ch = sess.checker
             props = []
-            if ch is not None and hasattr(ch, "clone"):
-                props = eng.speculator.propose(ch)
-            self.slots[slot].n_prop += len(props)
+            if ch is not None and sess.speculator is not None \
+                    and hasattr(ch, "clone"):
+                props = sess.speculator.propose(ch)
+            sess.n_prop += len(props)
             proposals[slot] = props
         if all(len(p) == 0 for p in proposals.values()):
             # nothing to verify anywhere: plain-width forward, no rollback
@@ -768,7 +813,6 @@ class ContinuousBatchingScheduler:
             self._logits = lg[:, -1].astype(jnp.float32)
             self._shrink_pages()       # return the unused verify window
             return
-        width = 1 + eng.cfg.spec_s
         feed = [[pad] * width for _ in range(self.capacity)]
         for slot, tok in live.items():
             row = [tok] + proposals[slot]
@@ -784,12 +828,12 @@ class ContinuousBatchingScheduler:
         # rows not in `live` consumed the full pad width; "accepting" it
         # keeps their (garbage, to-be-overwritten) length bookkeeping
         # consistent with the decoded cache
-        accepted_vec = np.full(self.capacity, eng.cfg.spec_s, np.int32)
+        accepted_vec = np.full(self.capacity, width - 1, np.int32)
         for slot, props in proposals.items():
             accepted_vec[slot] = self._verify_row(slot, props, lg_host[slot])
         if eng._needs_refeed:
             self._fixup_refeed(snapshot, live, proposals, accepted_vec,
-                               lg_dev)
+                               lg_dev, width)
         else:
             # per-row rollback: KV entries beyond `len` are masked by
             # validity, so rewinding the per-row length is the whole
@@ -807,17 +851,18 @@ class ContinuousBatchingScheduler:
                     lg_row: np.ndarray) -> int:
         """Greedy per-row verification, identical to the single-request
         path: accept the longest prefix where the proposal matches the
-        (masked) selection at each position."""
+        (masked) selection at each position.  All policy — temperature,
+        opportunistic checking, EOS id — is the row's own."""
         eng = self.eng
         sess = self.slots[slot]
         ch = sess.checker
+        greedy = sess.temperature <= 0.0
         accepted = 0
         for i, prop in enumerate(props):
             if sess.budget <= 0:
                 break
             tok_i = None
-            if eng.cfg.temperature <= 0.0 \
-                    and int(lg_row[i].argmax()) == prop:
+            if greedy and int(lg_row[i].argmax()) == prop:
                 t0 = time.perf_counter()
                 ok = ch.check_token(prop)
                 sess.mask_time += time.perf_counter() - t0
@@ -833,12 +878,12 @@ class ContinuousBatchingScheduler:
                 # under opportunistic mode _pick may accept the raw
                 # argmax without reading the premask — don't count a hit
                 # we can't attest
-                if not (eng.cfg.opportunistic
-                        and eng.cfg.temperature <= 0.0):
+                if not (sess.opportunistic and greedy):
                     self.premask_hits += int(pre is not None)
                 hits0 = getattr(ch, "n_mask_memo_hits", 0)
                 tok_i, intervened, mask_dt = eng._pick(lg_row[i], ch,
-                                                       premask=pre)
+                                                       premask=pre,
+                                                       policy=sess)
                 # _pick may have built a full mask (memo-eligible):
                 # keep the scheduler aggregate consistent with the
                 # per-session checker counters
@@ -851,11 +896,11 @@ class ContinuousBatchingScheduler:
                 sess.n_int += intervened
             if tok_i != prop:
                 break
-            eng.speculator.observe(ch.state_key(), tok_i)
+            sess.speculator.observe(ch.state_key(), tok_i)
             ch.advance(tok_i)
             self._premask.pop(slot, None)   # state moved: mask stale
             accepted += 1
-            if tok_i == eng.tok.eos_id:
+            if tok_i == sess.eos_id:
                 sess.finished_eos = True
                 break
             sess.out_ids.append(tok_i)
@@ -866,7 +911,7 @@ class ContinuousBatchingScheduler:
         return accepted
 
     def _fixup_refeed(self, snapshot, live, proposals, accepted_vec,
-                      lg_dev) -> None:
+                      lg_dev, width: int) -> None:
         """SSM/SWA rows cannot rewind state: re-feed each partially-
         accepted row's committed tokens from the pre-speculation cache.
         Rows are grouped by committed length, so each group is ONE
@@ -874,7 +919,6 @@ class ContinuousBatchingScheduler:
         decode plus whole-cache scatter per row — one compile per
         (group size, width) pair, bounded by capacity x spec_s."""
         eng = self.eng
-        s_max = eng.cfg.spec_s
         groups: Dict[int, List[int]] = {}
         committed: Dict[int, List[int]] = {}
         for slot, tok in live.items():
@@ -885,7 +929,7 @@ class ContinuousBatchingScheduler:
                 continue
             a = int(accepted_vec[slot])
             props = proposals[slot]
-            if a == len(props) and len(props) == s_max:
+            if a == len(props) and len(props) == width - 1:
                 # full accept, no pads: the batch-decoded row state is exact
                 self._logits = self._logits.at[slot].set(
                     lg_dev[slot, -1].astype(jnp.float32))

@@ -1,9 +1,12 @@
 """Per-request serving state.
 
 A :class:`Session` is everything the continuous-batching scheduler needs to
-know about one request: its grammar checker, its budget, the KV slot it
-occupies while resident, and per-request statistics (mask time, forward
-passes, speculation counters, wall-clock).  Sessions are created by
+know about one request: its :class:`~repro.serving.request.Request` (the
+constraint spec and decode policy), the grammar checker built from the
+engine's grammar registry, its budget, per-row decode policy (EOS id,
+temperature, sampling RNG, speculator), the KV slot it occupies while
+resident, and per-request statistics (mask time, forward passes,
+speculation counters, wall-clock).  Sessions are created by
 ``ServingEngine.make_session`` / ``Scheduler.submit`` and carry their
 :class:`GenerationResult` once finished.
 """
@@ -12,6 +15,8 @@ from __future__ import annotations
 import dataclasses
 import time
 from typing import Any, Dict, List, Optional
+
+import numpy as np
 
 
 @dataclasses.dataclass
@@ -33,8 +38,9 @@ class GenerationResult:
     # path
     mask_overlap_s: float = 0.0
     # full-mask builds served by the state-keyed memo on the shared
-    # TreeCache (recurring grammar states are a dict lookup instead of a
-    # tree walk) — the packed-mask analogue of premask_hits
+    # per-grammar TreeCache (recurring grammar states are a dict lookup
+    # instead of a tree walk) — attributed per request, so a mixed batch
+    # reports each row's own hits
     mask_cache_hits: int = 0
     # times this request was recompute-preempted by the paged-KV
     # scheduler (pages reclaimed under pool pressure, prompt + generated
@@ -56,12 +62,26 @@ class Session:
 
     States: waiting (slot < 0) -> active (slot >= 0) -> finished
     (result is not None, slot freed).
+
+    The per-row decode policy lives here: ``eos_id``, ``decode``
+    (temperature / budget / seed / speculation knobs), ``opportunistic``,
+    the per-request sampling ``rng`` and the (engine-shared-count-model)
+    ``speculator``.  The scheduler reads policy from the session, never
+    from an engine-global config — that is what lets one batch mix
+    grammars, modes and sampling policies per row.
     """
     rid: int
     prompt: str
     prompt_ids: List[int]
     checker: Any                      # DominoDecoder-like, or None
     budget: int
+    # -- per-row decode policy (filled by ServingEngine.make_session) --
+    eos_id: int = -1
+    decode: Any = None                # DecodeParams
+    opportunistic: bool = False
+    speculator: Any = None            # Speculator sharing the engine's
+    #                                   count model, or None
+    request: Any = None               # the originating Request
     extra_inputs: Optional[Dict[str, Any]] = None
     slot: int = -1
     out_ids: List[int] = dataclasses.field(default_factory=list)
@@ -81,6 +101,22 @@ class Session:
     t_admit: float = 0.0
     t_finish: float = 0.0
     result: Optional[GenerationResult] = None
+    _rng: Optional[np.random.Generator] = dataclasses.field(
+        default=None, repr=False)
+
+    @property
+    def temperature(self) -> float:
+        return 0.0 if self.decode is None else self.decode.temperature
+
+    @property
+    def rng(self) -> np.random.Generator:
+        """Per-request sampling RNG, created lazily from the request's
+        seed: sampled output depends only on the request, never on batch
+        composition or admission order."""
+        if self._rng is None:
+            self._rng = (self.decode.make_rng() if self.decode is not None
+                         else np.random.default_rng(0))
+        return self._rng
 
     def finish(self, decode_text) -> GenerationResult:
         self.t_finish = time.perf_counter()
