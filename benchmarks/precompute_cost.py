@@ -1,11 +1,14 @@
 """§4.3 — offline precomputation cost per grammar (paper: 1-5 s, C ~20 s
-at |V|=32k; ours scales with the in-repo vocab)."""
+at |V|=32k; ours scales with the in-repo vocab), plus the static
+analyzer's cost and closure certificate on the same caches (the analyzer
+shares the grammar's TreeCache, so its tree work is the precompute)."""
 from __future__ import annotations
 
 import time
 
 from benchmarks.common import emit, get_tokenizer
 from repro.core import grammars
+from repro.core.analysis import analyze
 from repro.core.scanner import Scanner
 from repro.core.trees import TreeCache
 
@@ -21,14 +24,28 @@ def run(verbose: bool = True):
         stats = tc.precompute()
         dt = time.perf_counter() - t0
         sizes = sum(t.root.size() for t in tc.trees.values())
+        rep = analyze(g, list(tok.vocab), tok.eos_id, name=name,
+                      tree_cache=tc)
+        c = rep.closure
         out[name] = {"seconds": dt, "positions": int(stats["positions"]),
-                     "total_tree_nodes": sizes}
+                     "total_tree_nodes": sizes,
+                     "analysis_seconds": rep.analysis_time_s,
+                     "closure_finite": c.finite,
+                     "closure_states": c.n_states,
+                     "mask_table_bytes": c.table_bytes}
         if verbose:
             print(f"  [precompute] {name:14s} {dt:6.2f}s "
                   f"{int(stats['positions'])} positions, "
                   f"{sizes} tree nodes", flush=True)
+            print(f"  [analyze]    {name:14s} {rep.analysis_time_s:6.2f}s "
+                  f"{'finite' if c.finite else 'open  '} "
+                  f"{c.n_states} states, mask table {c.table_bytes} B, "
+                  f"{'OK' if rep.ok() else 'FAIL'}", flush=True)
         emit(f"precompute_{name}", 1e6 * dt,
              f"positions={int(stats['positions'])};nodes={sizes}")
+        emit(f"analyze_{name}", 1e6 * rep.analysis_time_s,
+             f"states={c.n_states};finite={int(c.finite)};"
+             f"table_bytes={c.table_bytes};ok={int(rep.ok())}")
     return out
 
 

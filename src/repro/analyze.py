@@ -1,0 +1,5 @@
+"""Entry point: ``python -m repro.analyze`` (see repro.analysis.cli)."""
+from repro.analysis.cli import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

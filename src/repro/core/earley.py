@@ -104,6 +104,25 @@ class EarleyParser:
         substate β for speculative decoding, §3.6)."""
         return hash(frozenset(self.chart[-1].items))
 
+    def rel_signature(self, clamp: int = 8) -> int:
+        """Position-RELATIVE digest of the current item set: every item's
+        origin is rebased to its distance from the current position and
+        clamped at ``clamp``, so the digest recurs across absolute
+        positions (``state_signature`` never does — origins are absolute
+        chart indices, so it grows stale with history).
+
+        This is the finite-quotient key the static analyzer
+        (:mod:`repro.core.analysis`) explores the decoder state space on.
+        It is an ABSTRACTION, not an isomorphism: two parsers with equal
+        rel-signatures agree on the current item set shape but may carry
+        different charts beyond the clamp horizon, so future completion
+        behaviour can diverge.  Callers that need soundness must validate
+        conclusions against concrete replays (the analyzer does)."""
+        pos = len(self.chart) - 1
+        return hash(frozenset(
+            (ri, dot, min(pos - org, clamp))
+            for (ri, dot, org) in self.chart[-1].items))
+
     # -- internals ----------------------------------------------------------
 
     def _make_set(self, pos: int, seeds: List[Item]) -> _ItemSet:

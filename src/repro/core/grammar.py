@@ -99,6 +99,31 @@ class Grammar:
                     changed = True
         return frozenset(nullable)
 
+    def first_sets(self) -> Dict[int, frozenset]:
+        """FIRST sets: nonterminal id -> terminal ids that can begin one
+        of its derivations.  Standard fixpoint over the rules, epsilon
+        handled through ``nullable``.  Used by the static analyzer
+        (:mod:`repro.core.analysis`) and useful for any table-driven
+        consumer of the grammar."""
+        first: Dict[int, set] = {n: set()
+                                 for n in range(len(self.nonterminal_names))}
+        changed = True
+        while changed:
+            changed = False
+            for r in self.rules:
+                f = first[r.lhs]
+                before = len(f)
+                for s in r.rhs:
+                    if is_terminal(s):
+                        f.add(s)
+                        break
+                    f |= first[nt_id(s)]
+                    if nt_id(s) not in self.nullable:
+                        break
+                if len(f) != before:
+                    changed = True
+        return {n: frozenset(v) for n, v in first.items()}
+
     def terminal_name(self, tid: int) -> str:
         return self.terminals[tid].name
 

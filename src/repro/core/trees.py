@@ -30,8 +30,9 @@ recurring grammar state is a dict lookup.
 """
 from __future__ import annotations
 
+import collections
 import time
-from typing import Dict, FrozenSet, List, Optional, Tuple
+from typing import Dict, FrozenSet, Iterable, List, Optional, Tuple
 
 import numpy as np
 
@@ -155,10 +156,13 @@ class TreeCache:
         # whole-history fingerprint in the key makes most decode steps a
         # fresh entry, so an uncapped memo grows without bound on a
         # long-lived server (n_mask_words*4 bytes per entry — 32 KiB at
-        # gemma3's V).  FIFO-evict past mask_memo_max: dropping an entry
-        # only costs a rebuild, never correctness.
+        # gemma3's V).  LRU-evict past mask_memo_max (hits re-mark their
+        # entry, so recurring grammar states survive churn that a FIFO
+        # would evict them under): dropping an entry only costs a
+        # rebuild, never correctness.
         self.n_mask_words = bitmask.n_words(len(vocab))
-        self.mask_memo: Dict[object, np.ndarray] = {}
+        self.mask_memo: "collections.OrderedDict[object, np.ndarray]" = \
+            collections.OrderedDict()
         self.mask_memo_max = 4096
 
     def tree(self, position) -> SubterminalTree:
@@ -190,6 +194,15 @@ class TreeCache:
             "positions": float(len(self.trees)),
             "seconds": time.perf_counter() - t0,
         }
+
+    def reachable_positions(self, position) -> Iterable[object]:
+        """Scanner positions reachable from ``position`` through ONE
+        vocabulary token (recorded during tree construction).  Iterating
+        this from FRESH to a fixpoint enumerates the whole scanner-side
+        state space — ``precompute()`` does exactly that, and the static
+        analyzer (:mod:`repro.core.analysis`) walks the same graph for
+        its alignment-gap audit."""
+        return self._reachable_positions(self.tree(position))
 
     def _reachable_positions(self, tree: SubterminalTree):
         # Positions are recorded during construction; see _build.

@@ -46,6 +46,11 @@ def main() -> None:
                          "HBM)")
     ap.add_argument("--no-paged", action="store_true",
                     help="force contiguous per-slot KV stripes")
+    ap.add_argument("--analyze", default="off",
+                    choices=["off", "warn", "strict"],
+                    help="registration-time grammar analysis policy: "
+                         "'warn' reports traps/alignment gaps, 'strict' "
+                         "refuses to serve a grammar with any")
     ap.add_argument("--checkpoint", default=None)
     args = ap.parse_args()
 
@@ -91,10 +96,17 @@ def main() -> None:
         model = build_model(cfg)
 
     # ONE engine, one KV pool: constraints ride on each Request
-    engine = ServingEngine(model, params, tok, max_len=1024)
+    engine = ServingEngine(model, params, tok, max_len=1024,
+                           analysis_policy=args.analyze)
     for name, g in loaded.items():
-        engine.register_grammar(name, g)
+        engine.register_grammar(name, g)   # analyzed per --analyze policy
     engine.precompute()                 # warm every registered grammar
+    for name, rep in engine.analysis_reports.items():
+        print(f"[analysis] {name}: "
+              f"{'OK' if rep.ok() else 'PROBLEMS'} "
+              f"({rep.closure.n_states} states, "
+              f"{'finite' if rep.closure.finite else 'open'}, "
+              f"{rep.analysis_time_s:.2f}s)")
 
     decode = DecodeParams(
         temperature=args.temperature, max_tokens=args.max_tokens,

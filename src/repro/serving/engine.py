@@ -69,6 +69,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bitmask
+from repro.core.analysis import AnalysisReport, analyze, enforce
 from repro.core.baselines import TemplateSession
 from repro.core.grammar import Grammar
 from repro.core.scanner import Scanner
@@ -141,13 +142,28 @@ class ServingEngine:
                  cfg: Optional[EngineConfig] = None,
                  tree_cache: Optional[TreeCache] = None,
                  count_model: Optional[CountModel] = None,
-                 max_len: int = 1024):
+                 max_len: int = 1024,
+                 analysis_policy: str = "off",
+                 max_adhoc_grammars: int = 32):
         self.model = model
         self.params = params
         self.tok = tok
         self.grammar = grammar
         self.cfg = cfg or EngineConfig()
         self.max_len = max_len
+        # registration-time static analysis (repro.core.analysis):
+        #   off    — skip entirely (default; analysis costs ~seconds per
+        #            grammar, opt in for serving deployments)
+        #   warn   — run, report problems as a RuntimeWarning, register
+        #   strict — run, refuse to register a grammar with any problem
+        #            (raises AnalysisError BEFORE the registry commits)
+        self.analysis_policy = analysis_policy
+        self.analysis_reports: Dict[str, AnalysisReport] = {}
+        # refcounts + ad-hoc bookkeeping so rotating per-request Grammar
+        # objects does not leak (TreeCache, mask memo) pairs forever
+        self._grammar_refs: Dict[str, int] = {}
+        self._adhoc_order: List[str] = []
+        self.max_adhoc_grammars = max_adhoc_grammars
         # grammar registry: name -> (Grammar, shared TreeCache).  The
         # cache slot may be None: the legacy constructor registers its
         # grammar lazily when the default mode never consults trees, so
@@ -197,24 +213,70 @@ class ServingEngine:
     # -- grammar registry --------------------------------------------------------
 
     def register_grammar(self, name: str, grammar: Grammar,
-                         tree_cache: Optional[TreeCache] = None
-                         ) -> TreeCache:
+                         tree_cache: Optional[TreeCache] = None,
+                         policy: Optional[str] = None) -> TreeCache:
         """Register ``grammar`` under ``name`` with ONE shared TreeCache
         (subterminal trees + packed-mask memo).  Every request whose
         ``ConstraintSpec.grammar == name`` builds its checker against
-        this cache — no per-request tree construction.  Re-registering a
-        name replaces its entry.  Returns the cache."""
+        this cache — no per-request tree construction.
+
+        Under ``analysis_policy`` (or the per-call ``policy`` override)
+        ``warn``/``strict`` the grammar is statically analyzed against
+        the engine's vocabulary FIRST — a strict failure raises
+        :class:`~repro.core.analysis.AnalysisError` and registers
+        nothing.  The report lands in ``self.analysis_reports[name]``.
+
+        Re-registering a name with the SAME grammar object is a no-op
+        that bumps its refcount (see :meth:`unregister_grammar`); a
+        different grammar replaces the entry.  Returns the cache."""
+        prev = self.registry.get(name)
+        if prev is not None and prev[0] is grammar and prev[1] is not None:
+            self._grammar_refs[name] = self._grammar_refs.get(name, 0) + 1
+            return prev[1]
         tc = tree_cache if tree_cache is not None else TreeCache(
             Scanner(grammar), list(self.tok.vocab))
+        pol = policy if policy is not None else self.analysis_policy
+        if pol != "off":
+            report = analyze(grammar, list(self.tok.vocab),
+                             self.tok.eos_id, name=name, tree_cache=tc)
+            enforce(report, pol)       # strict: raises before committing
+            self.analysis_reports[name] = report
         self.registry[name] = (grammar, tc)
+        self._grammar_refs[name] = self._grammar_refs.get(name, 0) + 1
         return tc
+
+    def unregister_grammar(self, name: str) -> bool:
+        """Drop one reference to ``name``; when the count reaches zero the
+        registry entry — (Grammar, TreeCache) pair, mask memo and
+        analysis report — is released.  Engines that rotate through
+        ad-hoc grammars must pair each ``register_grammar`` with one
+        ``unregister_grammar`` or rely on the ad-hoc LRU cap.  Returns
+        True when the entry was fully removed."""
+        if name not in self.registry:
+            raise KeyError(f"grammar {name!r} is not registered")
+        n = self._grammar_refs.get(name, 1) - 1
+        if n > 0:
+            self._grammar_refs[name] = n
+            return False
+        self.registry.pop(name, None)
+        self._grammar_refs.pop(name, None)
+        self.analysis_reports.pop(name, None)
+        if name in self._adhoc_order:
+            self._adhoc_order.remove(name)
+        if self.tree_cache is not None and name == DEFAULT_GRAMMAR:
+            self.tree_cache = None
+        return True
 
     def resolve_grammar(self, ref) -> Tuple[Optional[Grammar],
                                             Optional[TreeCache]]:
         """Resolve a ConstraintSpec grammar reference to (grammar,
         shared TreeCache).  Accepts a registered name, a Grammar object
         (auto-registered keyed by identity so repeats share the cache),
-        or None."""
+        or None.  Auto-registered ad-hoc grammars live in a bounded LRU
+        (``max_adhoc_grammars``): once it is full the oldest entry whose
+        refcount is 1 (i.e. held only by the auto-registration itself)
+        is evicted, so per-request throwaway grammars cannot leak
+        (TreeCache, memo) pairs without bound."""
         if ref is None:
             return None, None
         if isinstance(ref, str):
@@ -225,27 +287,71 @@ class ServingEngine:
                     f"{sorted(self.registry)}); call "
                     f"engine.register_grammar({ref!r}, grammar) first")
             if entry[1] is None:       # lazily-registered: build now
+                self._grammar_refs.pop(ref, None)  # re-count the rebuild
                 return entry[0], self.register_grammar(ref, entry[0])
             return entry
         # Grammar object: reuse an existing registration, else auto-add
         for name, (g, tc) in self.registry.items():
             if g is ref:
                 if tc is None:
+                    self._grammar_refs.pop(name, None)
                     return g, self.register_grammar(name, g)
+                if name in self._adhoc_order:      # LRU touch
+                    self._adhoc_order.remove(name)
+                    self._adhoc_order.append(name)
                 return g, tc
         name = f"grammar@{id(ref):x}"
         self.register_grammar(name, ref)
+        self._adhoc_order.append(name)
+        while len(self._adhoc_order) > self.max_adhoc_grammars:
+            victim = next((n for n in self._adhoc_order
+                           if self._grammar_refs.get(n, 1) <= 1), None)
+            if victim is None:         # every ad-hoc entry is pinned
+                break
+            self._adhoc_order.remove(victim)
+            self.registry.pop(victim, None)
+            self._grammar_refs.pop(victim, None)
+            self.analysis_reports.pop(victim, None)
         return self.registry[name]
+
+    def analyze_grammar(self, name: str, policy: Optional[str] = None,
+                        **kwargs) -> AnalysisReport:
+        """(Re-)run static analysis for a registered grammar against the
+        engine's vocabulary, on the registry's SHARED TreeCache (so the
+        trees it builds are the trees serving will use).  ``kwargs`` pass
+        through to :func:`repro.core.analysis.analyze` (clamp,
+        max_states, ...).  The report is stored and policy-enforced."""
+        grammar, tc = self.resolve_grammar(name)
+        report = analyze(grammar, list(self.tok.vocab), self.tok.eos_id,
+                         name=name, tree_cache=tc, **kwargs)
+        self.analysis_reports[name] = report
+        enforce(report, policy if policy is not None
+                else self.analysis_policy)
+        return report
 
     def precompute(self) -> Dict[str, float]:
         """Offline warm path: build every reachable subterminal tree for
         EVERY registered grammar now (paper Algorithm 2) so serving never
         constructs trees on the critical path.  Each per-grammar
-        TreeCache is shared across all of that grammar's sessions."""
-        out = {"positions": 0.0, "seconds": 0.0}
-        for _g, tc in self.registry.values():
+        TreeCache is shared across all of that grammar's sessions.
+
+        Under ``analysis_policy != "off"`` this is also the analysis
+        sweep: any registered grammar without a stored report is analyzed
+        (and the policy enforced) here — reports in
+        ``self.analysis_reports``, aggregate cost in the returned
+        ``analysis_seconds``."""
+        out = {"positions": 0.0, "seconds": 0.0, "analysis_seconds": 0.0}
+        for name, (grammar, tc) in list(self.registry.items()):
             if tc is None:             # lazily registered, never resolved
                 continue
+            if self.analysis_policy != "off" \
+                    and name not in self.analysis_reports:
+                report = analyze(grammar, list(self.tok.vocab),
+                                 self.tok.eos_id, name=name,
+                                 tree_cache=tc)
+                self.analysis_reports[name] = report
+                out["analysis_seconds"] += report.analysis_time_s
+                enforce(report, self.analysis_policy)
             stats = tc.precompute()
             out["positions"] += stats["positions"]
             out["seconds"] += stats["seconds"]
@@ -585,6 +691,8 @@ class ServingEngine:
             finished=finished,
             dead_end=dead_end,
             mask_cache_hits=getattr(checker, "n_mask_memo_hits", 0),
+            n_hyp_truncations=getattr(checker, "n_hyp_truncations", 0),
+            max_hyp_fanout=getattr(checker, "max_hyp_fanout", 1),
         )
 
     # -- batched serving -------------------------------------------------------------

@@ -688,9 +688,12 @@ class ContinuousBatchingScheduler:
             for slot in sampled:
                 sess = self.slots[slot]
                 m = row_bits.get(slot)
+                # sampling needs a bool mask for probability renormali-
+                # zation; this unpack is per SAMPLED row only (greedy
+                # rows stay packed through the fused kernel above)
                 toks[slot] = select_token(
                     lg_host[slot],
-                    None if m is None else bitmask.unpack(m, v),
+                    None if m is None else bitmask.unpack(m, v),  # hotpath-lint: allow
                     sess.temperature, sess.rng)
         out: Dict[int, int] = {}
         for slot in occupied:

@@ -50,6 +50,17 @@ class GenerationResult:
     # Output up to this point is a valid *prefix* but cannot be completed;
     # forcing EOS here would silently emit grammar-violating output.
     dead_end: bool = False
+    # times the checker's scanner-hypothesis set overflowed
+    # MAX_HYPOTHESES and was truncated (a nonzero count means masks were
+    # potentially UNSOUND — legal tokens may have been excluded).  The
+    # static analyzer's ambiguity report (max abstract fan-out) predicts
+    # this: a grammar certified with fan-out well under the cap can never
+    # truncate at runtime.
+    n_hyp_truncations: int = 0
+    # peak size of the checker's hypothesis set over this request —
+    # compare against AnalysisReport.max_abstract_fanout to validate the
+    # analyzer's ambiguity model on real traffic
+    max_hyp_fanout: int = 1
 
     @property
     def tokens_per_forward(self) -> float:
@@ -136,5 +147,8 @@ class Session:
             wall_time_s=self.t_finish - self.t_submit,
             finished=self.finished_eos,
             dead_end=self.dead_end,
+            n_hyp_truncations=getattr(self.checker,
+                                      "n_hyp_truncations", 0),
+            max_hyp_fanout=getattr(self.checker, "max_hyp_fanout", 1),
         )
         return self.result

@@ -1,0 +1,253 @@
+"""Static grammar x vocabulary analysis (repro.core.analysis).
+
+Positive direction: the shipped zoo grammars certify clean against a
+byte-complete vocabulary.  Negative direction: grammars seeded with an
+empty-language terminal, a vocabulary alignment gap, or a
+never-terminating recursion are each detected with a CONCRETE witness
+that reproduces the failure on a real DominoDecoder.
+"""
+import json as jsonlib
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import grammars
+from repro.core.analysis import (AnalysisError, analyze, analyze_static,
+                                 dfa_subset, empty_terminals, enforce,
+                                 explore_decoder)
+from repro.core.domino import DominoDecoder
+from repro.core.grammar import parse_grammar
+from repro.core.regex import compile_pattern, literal_dfa
+
+
+def bytes_vocab():
+    return [bytes([i]) for i in range(256)] + [None]
+
+
+EOS = 256
+
+
+# -- layer 1 -----------------------------------------------------------------
+
+
+def test_empty_language_terminal_detected():
+    g = parse_grammar('start: "a" DEAD\nDEAD: /[^\\x00-\\xff]/\n')
+    dead = empty_terminals(g)
+    assert len(dead) == 1
+    issues = analyze_static(g)
+    kinds = {i.kind for i in issues}
+    assert "empty-terminal" in kinds
+    # a rule requiring an unmatched terminal also kills productivity
+    assert "unproductive-nonterminal" in kinds
+    assert any(i.severity == "error" for i in issues)
+
+
+def test_unreachable_and_unproductive():
+    g = parse_grammar('''
+start: "a"
+orphan: "b"
+loop: "c" loop
+''')
+    issues = analyze_static(g)
+    by_kind = {}
+    for i in issues:
+        by_kind.setdefault(i.kind, []).append(i.symbol)
+    assert "orphan" in by_kind["unreachable-nonterminal"]
+    assert "loop" in by_kind["unreachable-nonterminal"]
+    # `loop` is unproductive but UNREACHABLE, so it must not be an error
+    assert "loop" not in by_kind.get("unproductive-nonterminal", [])
+
+
+def test_ignore_shadowing_flagged():
+    g = parse_grammar('''
+start: WORD SPACE2
+WORD: /[a-z]+/
+SPACE2: "  "
+WS: / +/
+%ignore WS
+''')
+    issues = analyze_static(g)
+    shadowed = [i for i in issues if i.kind == "ignore-shadowed-terminal"]
+    assert [i.symbol for i in shadowed] == ["SPACE2"]
+
+
+def test_left_recursion_and_nullable_cycle():
+    g = parse_grammar('''
+start: e
+e: e "+" t | t
+t: "x"
+''')
+    kinds = {(i.kind, i.symbol) for i in analyze_static(g)}
+    assert ("left-recursion", "e") in kinds
+    g2 = parse_grammar('''
+start: a "x"
+a: b |
+b: a
+''')
+    kinds2 = {i.kind for i in analyze_static(g2)}
+    assert "nullable-cycle" in kinds2
+
+
+def test_dfa_subset():
+    a = literal_dfa("  ")
+    b = compile_pattern(" +")
+    assert dfa_subset(a, b)
+    assert not dfa_subset(b, a)
+
+
+# -- layer 2: traps, liveness, closure ---------------------------------------
+
+
+def test_trap_grammar_yields_confirmed_witness():
+    g = parse_grammar('start: "a" DEAD "b"\nDEAD: /[^\\x00-\\xff]/\n')
+    rep = analyze(g, bytes_vocab(), EOS, name="trapdoor")
+    assert not rep.ok()
+    assert rep.traps and all(w.confirmed for w in rep.traps)
+    # the witness must reproduce a runtime dead end on a FRESH decoder
+    w = rep.traps[0]
+    d = DominoDecoder(g, bytes_vocab(), EOS)
+    for t in w.token_ids:
+        assert d.advance(t)
+    assert not d.mask_bits().any()     # empty mask, EOS bit included
+
+
+def test_non_eos_live_detected_with_finite_closure():
+    g = parse_grammar('start: "a" loop\nloop: "b" loop\n')
+    rep = analyze(g, bytes_vocab(), EOS, name="nolive")
+    assert rep.closure.finite
+    assert rep.non_eos_live           # every state is a liveness hole
+    assert not rep.ok()
+    # but none of them is an (empty-mask) trap: decode runs forever
+    assert not rep.traps
+
+
+def test_json_zoo_certifies_clean():
+    g = grammars.load("json")
+    rep = analyze(g, bytes_vocab(), EOS, name="json")
+    assert rep.ok()
+    assert rep.closure.finite
+    assert not rep.traps and not rep.non_eos_live
+    assert not rep.alignment_gaps
+    assert rep.n_mask_conflicts == 0
+    c = rep.closure
+    assert c.table_words == c.n_states * c.mask_words
+    assert c.mask_words == (257 + 31) // 32
+    # report serializes to JSON (the CI artifact path)
+    jsonlib.dumps(rep.to_dict())
+
+
+def test_exploration_graph_consistency():
+    g = grammars.load("arith")
+    ex = explore_decoder(g, bytes_vocab(), EOS)
+    assert ex.finite
+    assert ex.n_states == len(ex.eos_ok) == len(ex.empty_mask)
+    # BFS shortest-witness invariant: some state at depth >= 1 exists and
+    # the root's path is empty
+    assert ex.paths[0] == []
+    assert ex.max_fanout >= 1
+
+
+# -- alignment gaps ----------------------------------------------------------
+
+
+def test_alignment_gap_against_crippled_vocab():
+    # vocabulary has no token containing byte 'q'; QQ is unspellable
+    vocab = [bytes([i]) if i != 0x71 else b"#" for i in range(256)]
+    vocab.append(None)
+    g = parse_grammar('start: "a" QQ\nQQ: "qq"\n')
+    rep = analyze(g, vocab, EOS, name="gap")
+    gaps = [i.symbol for i in rep.alignment_gaps]
+    assert gaps == ["QQ"]
+    assert not rep.ok()
+    # the same grammar against a byte-complete vocab has no gap
+    rep2 = analyze(g, bytes_vocab(), EOS, name="nogap")
+    assert not rep2.alignment_gaps
+    assert rep2.ok()
+
+
+def test_multibyte_tokens_can_close_gaps():
+    # no single 'q' byte token, but a multi-byte "qq" token spells QQ
+    vocab = [bytes([i]) if i != 0x71 else b"#" for i in range(256)]
+    vocab.append(b"qq")
+    vocab.append(None)                 # EOS = 257
+    g = parse_grammar('start: "a" QQ\nQQ: "qq"\n')
+    rep = analyze(g, vocab, 257, name="bridged")
+    assert not rep.alignment_gaps
+    assert rep.ok()
+
+
+# -- policy enforcement ------------------------------------------------------
+
+
+def test_enforce_policies():
+    g = parse_grammar('start: "a" DEAD\nDEAD: /[^\\x00-\\xff]/\n')
+    rep = analyze(g, bytes_vocab(), EOS, name="bad")
+    assert enforce(rep, "off") is rep
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        enforce(rep, "warn")
+    assert len(w) == 1 and issubclass(w[0].category, RuntimeWarning)
+    with pytest.raises(AnalysisError) as ei:
+        enforce(rep, "strict")
+    assert ei.value.report is rep
+    with pytest.raises(ValueError):
+        enforce(rep, "nonsense")
+
+
+def test_enforce_clean_report_is_silent():
+    g = grammars.load("arith")
+    rep = analyze(g, bytes_vocab(), EOS, name="arith")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")   # any warning -> test failure
+        enforce(rep, "strict")
+
+
+# -- CLI ---------------------------------------------------------------------
+
+
+def test_cli_gate(tmp_path, capsys):
+    from repro.analysis.cli import main
+    out = tmp_path / "rep.json"
+    assert main(["arith", "--strict", "--quiet",
+                 "--json", str(out)]) == 0
+    payload = jsonlib.loads(out.read_text())
+    assert payload["ok"] and "arith" in payload["reports"]
+    bad = tmp_path / "bad.lark"
+    bad.write_text('start: "a" DEAD\nDEAD: /[^\\x00-\\xff]/\n')
+    assert main([str(bad), "--strict", "--quiet"]) == 1
+    assert main([str(bad), "--quiet"]) == 0    # non-strict: report only
+    assert main(["no-such-grammar"]) == 2
+
+
+# -- truncation counter (satellite: domino soundness) ------------------------
+
+
+def test_truncation_counter_surfaces_in_session_result():
+    from repro.serving.session import Session
+
+    class _StubChecker:
+        n_mask_memo_hits = 3
+        n_hyp_truncations = 2
+        max_hyp_fanout = 64
+
+    s = Session(rid=0, prompt="p", prompt_ids=[1], checker=_StubChecker(),
+                budget=4)
+    r = s.finish(lambda ids: "")
+    assert r.n_hyp_truncations == 2
+    assert r.max_hyp_fanout == 64
+    assert r.mask_cache_hits == 3
+
+
+def test_analyzer_fanout_bounds_runtime_fanout():
+    """The analyzer's max_abstract_fanout is measured on real decoders,
+    so replaying any explored path can never exceed it."""
+    g = grammars.load("json")
+    vocab = bytes_vocab()
+    rep = analyze(g, vocab, EOS, name="json")
+    d = DominoDecoder(g, vocab, EOS)
+    text = b'{"k": [1, 2]}'
+    for b in text:
+        assert d.advance(b)
+        assert len(d.hyps) <= rep.max_abstract_fanout + 1
+    assert d.n_hyp_truncations == 0

@@ -1,0 +1,214 @@
+#!/usr/bin/env python
+"""Hot-path lint: structural regressions the test suite can't catch.
+
+The mask pipeline's whole point (PR 4) is that the serving tick never
+materializes dense ``(B, V)`` data on the host: masks stay packed uint32
+end to end and the fused kernel unpacks in-register.  Nothing functional
+breaks if someone reintroduces a dense staging array or a
+``bitmask.unpack`` call on the tick path — output is identical, only 8x
+slower on the mask bytes — so tests stay green while the paper's headline
+property quietly rots.  This linter fails CI instead.
+
+Rules (AST-based, stdlib only):
+
+  R1  no dense >=2-D array allocation (``np.zeros((B, V))``-style, or
+      ``np.tile``) inside the scheduler's tick-path functions or the
+      masked-sample dispatch module;
+  R2  no ``unpack(...)`` calls in those same scopes (packed masks must
+      reach the kernel packed);
+  R3  no wall-clock/global-RNG nondeterminism in ``src/repro/core/``:
+      ``time.time``/``datetime.now``/``datetime.utcnow``, module-level
+      ``random.*`` draws, or ``np.random.*`` (``time.perf_counter`` /
+      ``time.monotonic`` are fine — they feed timing *stats*, not
+      decisions; per-request ``np.random.Generator`` objects are created
+      outside core/ and passed in).
+
+A finding is suppressed by putting ``# hotpath-lint: allow`` on the
+offending physical line (or the line above it).  Every suppression is a
+reviewed, deliberate exception — the scheduler's sampled-row unpack is
+the canonical one.
+
+Usage: ``python tools/lint_hotpath.py`` (from the repo root; exits 1 on
+violations).  Pass file paths to restrict the run.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import sys
+from typing import List, Optional, Set, Tuple
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+PRAGMA = "hotpath-lint: allow"
+
+# scheduler functions on the per-token serving critical path (admission /
+# teardown helpers deliberately excluded — they may allocate)
+TICK_FUNCS: Set[str] = {
+    "step", "_verify_width", "_reset_vacant_lens", "_checker_bits",
+    "_prebuild_masks", "_choose", "_commit_first", "_run_decode",
+    "_plain_step", "_spec_step", "_verify_row", "_fixup_refeed",
+    "_ensure_pages", "_shrink_pages", "_sync_pages",
+}
+
+ALLOC_FUNCS = {"zeros", "ones", "empty", "full", "tile"}
+CLOCK_BANNED = {("time", "time"), ("datetime", "now"),
+                ("datetime", "utcnow"), ("datetime", "today")}
+RANDOM_FUNCS = {"random", "randint", "choice", "choices", "shuffle",
+                "uniform", "seed", "randrange", "sample"}
+
+
+class Finding:
+    def __init__(self, path: str, line: int, rule: str, msg: str):
+        self.path, self.line, self.rule, self.msg = path, line, rule, msg
+
+    def __str__(self) -> str:
+        rel = os.path.relpath(self.path, REPO)
+        return f"{rel}:{self.line}: [{self.rule}] {self.msg}"
+
+
+def _has_pragma(lines: List[str], lineno: int) -> bool:
+    for ln in (lineno, lineno - 1):
+        if 1 <= ln <= len(lines) and PRAGMA in lines[ln - 1]:
+            return True
+    return False
+
+
+def _call_name(node: ast.Call) -> Tuple[Optional[str], Optional[str]]:
+    """('np', 'zeros') for np.zeros(...), (None, 'unpack') for unpack(...)."""
+    f = node.func
+    if isinstance(f, ast.Attribute):
+        if isinstance(f.value, ast.Name):
+            return f.value.id, f.attr
+        if isinstance(f.value, ast.Attribute) \
+                and isinstance(f.value.value, ast.Name):
+            # e.g. np.random.randint -> ('np.random', 'randint')
+            return f"{f.value.value.id}.{f.value.attr}", f.attr
+        return None, f.attr
+    if isinstance(f, ast.Name):
+        return None, f.id
+    return None, None
+
+
+def _is_dense_shape(arg: ast.expr) -> bool:
+    """Shape literal with >=2 dims (tuple/list of 2+ elements)."""
+    return isinstance(arg, (ast.Tuple, ast.List)) and len(arg.elts) >= 2
+
+
+def _check_hot_scope(tree_nodes, path: str, lines: List[str],
+                     where: str) -> List[Finding]:
+    out: List[Finding] = []
+    for node in tree_nodes:
+        if not isinstance(node, ast.Call):
+            continue
+        if _has_pragma(lines, node.lineno):
+            continue
+        base, name = _call_name(node)
+        if name in ALLOC_FUNCS and base in ("np", "jnp", "numpy", "jax"):
+            dense = (name == "tile"
+                     and len(node.args) >= 2 and _is_dense_shape(node.args[1])
+                     ) or (name != "tile" and node.args
+                           and _is_dense_shape(node.args[0]))
+            if dense:
+                out.append(Finding(
+                    path, node.lineno, "R1",
+                    f"dense >=2-D allocation {base}.{name}(...) in "
+                    f"{where} — the tick path must stay packed "
+                    f"(ceil(V/32) uint32 words per row, reused buffers)"))
+        if name == "unpack":
+            out.append(Finding(
+                path, node.lineno, "R2",
+                f"unpack(...) call in {where} — packed masks must reach "
+                f"the fused kernel packed; unpacking on the host "
+                f"re-creates the dense (B, V) traffic PR 4 removed"))
+    return out
+
+
+def lint_scheduler(path: str) -> List[Finding]:
+    with open(path) as f:
+        src = f.read()
+    lines = src.splitlines()
+    tree = ast.parse(src, path)
+    out: List[Finding] = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node.name in TICK_FUNCS:
+            out.extend(_check_hot_scope(
+                ast.walk(node), path, lines,
+                f"tick-path function {node.name}()"))
+    return out
+
+
+def lint_kernel_dispatch(path: str) -> List[Finding]:
+    with open(path) as f:
+        src = f.read()
+    lines = src.splitlines()
+    tree = ast.parse(src, path)
+    return _check_hot_scope(ast.walk(tree), path, lines,
+                            "masked-sample dispatch")
+
+
+def lint_core_determinism(path: str) -> List[Finding]:
+    with open(path) as f:
+        src = f.read()
+    lines = src.splitlines()
+    tree = ast.parse(src, path)
+    out: List[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if _has_pragma(lines, node.lineno):
+            continue
+        base, name = _call_name(node)
+        if (base, name) in CLOCK_BANNED:
+            out.append(Finding(
+                path, node.lineno, "R3",
+                f"wall-clock call {base}.{name}() in core/ — grammar "
+                f"state must be reproducible; use time.perf_counter() "
+                f"for timing stats only"))
+        if base in ("random",) and name in RANDOM_FUNCS:
+            out.append(Finding(
+                path, node.lineno, "R3",
+                f"global-RNG call random.{name}() in core/ — draw from "
+                f"an explicitly seeded np.random.Generator passed in by "
+                f"the caller"))
+        if base in ("np.random", "numpy.random") and name != "default_rng":
+            out.append(Finding(
+                path, node.lineno, "R3",
+                f"global numpy RNG call {base}.{name}() in core/ — "
+                f"module-level RNG state makes decode output depend on "
+                f"call order; accept a Generator argument instead"))
+    return out
+
+
+def main(argv: List[str]) -> int:
+    if argv:
+        targets = [os.path.abspath(a) for a in argv]
+    else:
+        targets = None
+    sched = os.path.join(REPO, "src", "repro", "serving", "scheduler.py")
+    dispatch = os.path.join(REPO, "src", "repro", "kernels",
+                            "masked_sample", "ops.py")
+    core_dir = os.path.join(REPO, "src", "repro", "core")
+
+    findings: List[Finding] = []
+    if targets is None or sched in targets:
+        findings.extend(lint_scheduler(sched))
+    if targets is None or dispatch in targets:
+        findings.extend(lint_kernel_dispatch(dispatch))
+    for fn in sorted(os.listdir(core_dir)):
+        path = os.path.join(core_dir, fn)
+        if fn.endswith(".py") and (targets is None or path in targets):
+            findings.extend(lint_core_determinism(path))
+
+    for f in findings:
+        print(f)
+    if findings:
+        print(f"\n{len(findings)} hot-path lint violation(s)",
+              file=sys.stderr)
+        return 1
+    print("hot-path lint: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
