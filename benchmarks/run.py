@@ -13,7 +13,7 @@ import time
 
 def main() -> None:
     from benchmarks import (fig2_template, fig5_speculation, kernel_bench,
-                            mask_bench, precompute_cost,
+                            mask_bench, precompute_cost, serving_bench,
                             table2_invasiveness, table2b_ner,
                             table3_throughput, table4_lookahead)
     sections = {
@@ -26,6 +26,7 @@ def main() -> None:
         "fig5": fig5_speculation.run,
         "kernels": kernel_bench.run,
         "mask": mask_bench.run,
+        "serving": serving_bench.run,
     }
     want = sys.argv[1:] or list(sections)
     print("name,us_per_call,derived")

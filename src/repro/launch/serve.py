@@ -46,6 +46,15 @@ def main() -> None:
                          "HBM)")
     ap.add_argument("--no-paged", action="store_true",
                     help="force contiguous per-slot KV stripes")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request wall-clock deadline in seconds "
+                         "(queue wait included); overdue requests end "
+                         "with status deadline_exceeded instead of "
+                         "holding a slot (default: unbounded)")
+    ap.add_argument("--queue-limit", type=int, default=None,
+                    help="bound the scheduler's waiting queue: overflow "
+                         "submissions are shed immediately with status "
+                         "rejected (default: unbounded)")
     ap.add_argument("--analyze", default="off",
                     choices=["off", "warn", "strict"],
                     help="registration-time grammar analysis policy: "
@@ -110,7 +119,8 @@ def main() -> None:
 
     decode = DecodeParams(
         temperature=args.temperature, max_tokens=args.max_tokens,
-        speculative=args.speculative, spec_s=args.spec_s)
+        speculative=args.speculative, spec_s=args.spec_s,
+        deadline_s=args.deadline_s)
     specs = []
     for name in gnames:
         if name == "none" or args.mode == "unconstrained":
@@ -144,15 +154,18 @@ def main() -> None:
         results = engine.generate_batch(
             requests, max_batch=args.slots,
             paged=False if args.no_paged else None,
-            page_size=args.page_size, n_pages=args.pool_pages)
+            page_size=args.page_size, n_pages=args.pool_pages,
+            queue_limit=args.queue_limit)
     else:
         results = [engine.generate(r) for r in requests]
     for lbl, req, r in zip(labels, requests, results):
         print(f"--- prompt[{lbl}]: {req.prompt!r}")
-        print(f"    out[{r.n_tokens} toks, {r.n_forward_passes} fwd, "
+        print(f"    out[status={r.status}, {r.n_tokens} toks, "
+              f"{r.n_forward_passes} fwd, "
               f"{r.n_interventions} interventions, "
               f"spec {r.n_spec_accepted}/{r.n_spec_proposed}]: "
-              f"{r.text[:120]!r}")
+              f"{r.text[:120]!r}"
+              + (f" error={r.error}" if r.error else ""))
 
 
 if __name__ == "__main__":

@@ -1,8 +1,11 @@
 from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.faults import (FaultInjector, InjectedFault,
+                                  InvariantViolation, check_invariants)
 from repro.serving.request import ConstraintSpec, DecodeParams, Request
 from repro.serving.scheduler import ContinuousBatchingScheduler
 from repro.serving.session import GenerationResult, Session
 
 __all__ = ["ServingEngine", "EngineConfig", "GenerationResult", "Session",
            "ContinuousBatchingScheduler", "ConstraintSpec", "DecodeParams",
-           "Request"]
+           "Request", "FaultInjector", "InjectedFault",
+           "InvariantViolation", "check_invariants"]

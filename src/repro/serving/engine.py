@@ -566,8 +566,23 @@ class ServingEngine:
 
         finished = False
         dead_end = False
+        status: Optional[str] = None       # non-ok terminal override
+        error: Optional[str] = None
         budget = dp.max_tokens
-        while budget > 0 and not finished and not dead_end:
+        while budget > 0 and not finished and not dead_end \
+                and status is None:
+            # fault edges shared with the scheduler path: a request-level
+            # deadline bounds wall time, and non-finite logits terminate
+            # with an explicit status instead of committing garbage
+            if dp.deadline_s is not None \
+                    and time.perf_counter() - t_start > dp.deadline_s:
+                status = "deadline_exceeded"
+                error = f"deadline {dp.deadline_s:g}s exceeded"
+                break
+            if not np.all(np.isfinite(logits)):
+                status = "internal_error"
+                error = "non-finite logits from device step"
+                break
             # ---- try speculative fast path -------------------------------------
             if (speculator is not None and checker is not None
                     and hasattr(checker, "clone")):
@@ -605,6 +620,11 @@ class ServingEngine:
                 ch = checker
                 for i, prop in enumerate(proposals):
                     if budget <= 0:
+                        break
+                    if not np.all(np.isfinite(lg_multi[i])):
+                        status = "internal_error"
+                        error = ("non-finite logits in speculative "
+                                 "verify window")
                         break
                     # fast verification: if the raw argmax equals the
                     # proposal, an O(token) opportunistic legality check
@@ -678,6 +698,8 @@ class ServingEngine:
             n_fwd += 1
 
         return GenerationResult(
+            status=status or ("dead_end" if dead_end else "ok"),
+            error=error,
             text=self.tok.decode(out_ids),
             token_ids=out_ids,
             n_forward_passes=n_fwd,
@@ -701,7 +723,12 @@ class ServingEngine:
                        max_batch: Optional[int] = None,
                        paged: Optional[bool] = None,
                        page_size: Optional[int] = None,
-                       n_pages: Optional[int] = None
+                       n_pages: Optional[int] = None,
+                       queue_limit: Optional[int] = None,
+                       queue_timeout_s: Optional[float] = None,
+                       default_deadline_s: Optional[float] = None,
+                       fault_injector=None,
+                       debug_invariants: bool = False
                        ) -> List[GenerationResult]:
         """Serve ``requests`` (Requests or bare prompt strings) through
         the continuous-batching scheduler.  Rows may mix grammars,
@@ -717,6 +744,15 @@ class ServingEngine:
         undersized pool exerts admission backpressure instead of OOM).
         Call :meth:`precompute` first to keep tree construction off the
         serving critical path.
+
+        Fault-tolerance knobs pass straight through to the scheduler:
+        ``queue_limit`` / ``queue_timeout_s`` bound the waiting queue,
+        ``default_deadline_s`` bounds wall time for requests that carry
+        no ``DecodeParams.deadline_s``, ``fault_injector`` wires a
+        :class:`~repro.serving.faults.FaultInjector`, and
+        ``debug_invariants`` audits every tick boundary.  Every request
+        gets a result regardless — non-ok outcomes carry an explicit
+        ``status`` / ``error``.
         """
         from repro.serving.scheduler import ContinuousBatchingScheduler
         cap = min(len(requests), max_batch) if max_batch else len(requests)
@@ -727,7 +763,12 @@ class ServingEngine:
             kwargs["page_size"] = page_size
         if n_pages is not None:
             kwargs["n_pages"] = n_pages
-        sched = ContinuousBatchingScheduler(self, capacity=cap, **kwargs)
+        sched = ContinuousBatchingScheduler(
+            self, capacity=cap, queue_limit=queue_limit,
+            queue_timeout_s=queue_timeout_s,
+            default_deadline_s=default_deadline_s,
+            fault_injector=fault_injector,
+            debug_invariants=debug_invariants, **kwargs)
         sessions = [sched.submit(r) for r in requests]
         sched.run()
         return [s.result for s in sessions]

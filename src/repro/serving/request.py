@@ -113,6 +113,11 @@ class DecodeParams:
     speculative: bool = False
     spec_s: int = 8
     spec_threshold: float = 0.5
+    # wall-clock deadline in seconds, measured from submission (queue
+    # wait included).  None = unbounded.  An overdue request terminates
+    # with status ``deadline_exceeded`` at the next tick boundary, its
+    # slot and pages freed for batch-mates.
+    deadline_s: Optional[float] = None
 
     def make_rng(self) -> np.random.Generator:
         """Per-request sampling RNG: seeded from the request, so a

@@ -73,7 +73,30 @@ Design points (ISSUE 1 tentpole):
  - sessions on the same grammar share that grammar's TreeCache (and all
    sessions share the engine's count model); call ``warm()`` to run the
    offline ``precompute()`` pass over every registered grammar before
-   serving.
+   serving;
+ - fault tolerance (ISSUE 7 tentpole): every request ends in exactly one
+   explicit terminal status (``GenerationResult.status``: ok | dead_end |
+   deadline_exceeded | cancelled | rejected | internal_error) and one
+   request's failure never perturbs its batch-mates.  Every tick starts
+   with a lifecycle sweep (``_reap``): cancellation requested via
+   ``cancel(rid)`` and per-request deadlines (``DecodeParams.deadline_s``,
+   or the scheduler-wide ``default_deadline_s`` / ``queue_timeout_s``)
+   take effect here, freeing the slot and pages immediately.  Failures
+   are quarantined to the offending row: non-finite logits from the
+   device step fail only that row (detected before selection), a
+   checker / mask-build exception — including during the overlapped
+   prebuild and speculative verification — evicts that session with
+   ``internal_error`` while the tick completes for everyone else, an
+   admission whose demand can NEVER be met (prompt pages > pool
+   capacity, prompt > max_len) is rejected instead of blocking the FIFO
+   queue forever, and ``queue_limit`` bounds the waiting queue by
+   shedding overflow with ``rejected``.  A seeded
+   :class:`~repro.serving.faults.FaultInjector` can be wired to the
+   documented injection sites (one per tick phase), and
+   ``debug_invariants=True`` audits free-list/block-table consistency
+   and the slot<->session bijection at every tick boundary — surviving
+   rows are asserted bitwise-identical to fault-free runs by the chaos
+   suite (tests/test_faults.py).
 
 Token selection is identical to the single-request engine path at
 temperature 0 (greedy masked argmax, ties to the lowest index), so
@@ -93,6 +116,8 @@ import numpy as np
 from repro.core import bitmask
 from repro.kernels.masked_sample.ops import masked_argmax
 from repro.models import kvcache
+from repro.serving.faults import (FaultInjector, InjectedFault,
+                                  InvariantViolation, check_invariants)
 from repro.serving.request import Request, select_token
 from repro.serving.session import GenerationResult, Session
 
@@ -278,12 +303,27 @@ class ContinuousBatchingScheduler:
                  bucket_prefill: bool = True,
                  paged: Optional[bool] = None, page_size: int = 64,
                  n_pages: Optional[int] = None,
-                 adaptive_prebuild: bool = True):
+                 adaptive_prebuild: bool = True,
+                 queue_limit: Optional[int] = None,
+                 queue_timeout_s: Optional[float] = None,
+                 default_deadline_s: Optional[float] = None,
+                 fault_injector: Optional[FaultInjector] = None,
+                 debug_invariants: bool = False):
         self.eng = engine
         self.capacity = max(1, capacity)
         self.overlap = overlap
         self.bucket_prefill = bucket_prefill
         self.adaptive_prebuild = adaptive_prebuild
+        # fault-tolerance policy: a bounded waiting queue sheds overflow
+        # with `rejected` instead of growing without bound; queued
+        # requests older than queue_timeout_s shed the same way; a
+        # request's own DecodeParams.deadline_s (falling back to
+        # default_deadline_s) bounds its total wall time
+        self.queue_limit = queue_limit
+        self.queue_timeout_s = queue_timeout_s
+        self.default_deadline_s = default_deadline_s
+        self.injector = fault_injector
+        self.debug_invariants = debug_invariants
         self.waiting: "collections.deque[Session]" = collections.deque()
         self.slots: List[Optional[Session]] = [None] * self.capacity
         can_page = kvcache.pageable(engine.model.cfg)
@@ -322,6 +362,14 @@ class ContinuousBatchingScheduler:
         self.cache["len"] = jnp.zeros((self.capacity,), jnp.int32)  # ragged
         vpad = engine.model.padded_vocab
         self._logits = jnp.zeros((self.capacity, vpad), jnp.float32)
+        v = engine._v
+        # one fused readback per tick: raw argmax + per-row finiteness
+        # (the device-fault detector — a NaN/Inf row is quarantined
+        # BEFORE any selection consumes it; vocab-padded columns are
+        # excluded, their values are unspecified by contract)
+        self._raw_stats = jax.jit(lambda lg: (
+            jnp.argmax(lg, axis=-1),
+            jnp.all(jnp.isfinite(lg[:, :v]), axis=-1)))
         self._raw_argmax = jax.jit(lambda lg: jnp.argmax(lg, axis=-1))
         # persistent packed mask staging buffer: one (capacity, V/32)
         # uint32 row per slot, reused every tick (no per-tick (B, V) int8
@@ -350,6 +398,13 @@ class ContinuousBatchingScheduler:
         self.n_fwd = 0                 # global forward count (all slots)
         self.n_preempt = 0             # paged recompute preemptions
         self._next_rid = 0
+        # lifecycle bookkeeping: every terminal session in submit order
+        # (`run()` reports from here, so submit-time rejections are never
+        # lost); _finished_now accumulates between step() drains
+        self.finished: List[Session] = []
+        self._finished_now: List[Session] = []
+        self.status_counts = collections.Counter()
+        self._fail_log: List = []      # (rid, error) per quarantined row
 
     # -- public API -------------------------------------------------------------
 
@@ -363,26 +418,52 @@ class ContinuousBatchingScheduler:
                extra_inputs=None) -> Session:
         """Queue one request.  ``request`` is a
         :class:`~repro.serving.request.Request` (per-row grammar, mode,
-        EOS, budget, temperature, seed, speculation) or a bare prompt
-        string, which submits the engine-default request."""
+        EOS, budget, temperature, seed, speculation, deadline) or a bare
+        prompt string, which submits the engine-default request.
+
+        With a bounded queue (``queue_limit``) an overflowing submission
+        is shed immediately: the returned session already carries a
+        ``rejected`` result instead of growing the queue without bound.
+        """
         sess = self.eng.make_session(self._next_rid, request, extra_inputs)
         self._next_rid += 1
+        if self.queue_limit is not None \
+                and len(self.waiting) >= self.queue_limit:
+            self._finish(sess, status="rejected",
+                         error=f"waiting queue full "
+                               f"(queue_limit={self.queue_limit})")
+            return sess
         self.waiting.append(sess)
         return sess
 
+    def cancel(self, rid: int) -> bool:
+        """Request cancellation of a waiting or resident request by rid.
+        Takes effect at the NEXT tick boundary: the session terminates
+        with status ``cancelled`` and its slot and pages are freed for
+        batch-mates.  Returns False when no live request has this rid
+        (already finished, or never submitted)."""
+        for sess in list(self.waiting) + self.slots:
+            if sess is not None and sess.rid == rid \
+                    and sess.result is None:
+                sess.cancel_requested = True
+                return True
+        return False
+
     def run(self) -> List[GenerationResult]:
-        """Drive all submitted sessions to completion; results in rid
-        order."""
-        done: List[Session] = []
+        """Drive all submitted sessions to a terminal status; results in
+        rid order (including submit-time rejections)."""
         while self.waiting or any(s is not None for s in self.slots):
-            done.extend(self.step())
-        done.sort(key=lambda s: s.rid)
+            self.step()
+        done = sorted(self.finished, key=lambda s: s.rid)
         return [s.result for s in done]
 
     def step(self) -> List[Session]:
-        """One scheduler tick: admit -> select -> decode.  Returns sessions
-        that finished during this tick."""
-        self._finished_now: List[Session] = []
+        """One scheduler tick: reap -> admit -> select -> decode.
+        Returns sessions that reached a terminal status since the last
+        drain (tick casualties and submit-time rejections alike)."""
+        if self.injector is not None:
+            self.injector.begin_tick()
+        self._reap()
         self._admit()
         if any(s is not None for s in self.slots):
             width = self._verify_width()
@@ -391,7 +472,57 @@ class ContinuousBatchingScheduler:
             else:
                 self._plain_step()
         self._reset_vacant_lens()
-        return self._finished_now
+        if self.debug_invariants:
+            problems = check_invariants(self)
+            if problems:
+                raise InvariantViolation("; ".join(problems))
+        done, self._finished_now = self._finished_now, []
+        return done
+
+    # -- lifecycle: deadlines / cancellation ------------------------------------
+
+    def _overdue(self, sess: Session, now: float, waiting: bool):
+        """(status, reason) if the session must terminate at this tick
+        boundary, else (None, None)."""
+        if sess.cancel_requested:
+            return "cancelled", ("cancelled while waiting" if waiting
+                                 else "cancelled while decoding")
+        deadline = sess.deadline_s
+        if deadline is None:
+            deadline = self.default_deadline_s
+        waited = now - sess.t_submit
+        if deadline is not None and waited > deadline:
+            return "deadline_exceeded", (
+                f"deadline {deadline:g}s exceeded after {waited:.3f}s"
+                + (" in queue" if waiting else ""))
+        if waiting and self.queue_timeout_s is not None \
+                and waited > self.queue_timeout_s:
+            return "rejected", (f"queue-wait timeout "
+                                f"({self.queue_timeout_s:g}s) exceeded")
+        return None, None
+
+    def _reap(self) -> None:
+        """Tick-boundary lifecycle sweep: honor cancellations, enforce
+        per-request deadlines (waiting AND resident), and shed queued
+        requests past the queue-wait timeout.  Freed slots and pages are
+        available to this very tick's admission."""
+        now = time.perf_counter()
+        if self.waiting:
+            keep: "collections.deque[Session]" = collections.deque()
+            while self.waiting:
+                sess = self.waiting.popleft()
+                status, why = self._overdue(sess, now, waiting=True)
+                if status is None:
+                    keep.append(sess)
+                else:
+                    self._finish(sess, status=status, error=why)
+            self.waiting = keep
+        for sess in list(self.slots):
+            if sess is None:
+                continue
+            status, why = self._overdue(sess, now, waiting=False)
+            if status is not None:
+                self._finish(sess, status=status, error=why)
 
     def _verify_width(self) -> int:
         """Speculative verify width for this tick: 1 + the widest
@@ -405,6 +536,25 @@ class ContinuousBatchingScheduler:
 
     # -- admission / eviction ---------------------------------------------------
 
+    def _admission_reject_reason(self, n_tokens: int) -> Optional[str]:
+        """Reason string when a request's cache demand can NEVER be met
+        (not even by an otherwise-empty engine), else None.  These must
+        be rejected up front: the FIFO queue blocks behind its head, so
+        an unsatisfiable head request would livelock every request
+        behind it forever (the old behavior)."""
+        if n_tokens + 1 > self.eng.max_len:
+            return (f"prompt needs {n_tokens + 1} cache positions > "
+                    f"engine max_len {self.eng.max_len}")
+        if self.paged:
+            n_pg = _ceil_div(n_tokens + 1, self.page_size)
+            if n_pg > self.max_pages:
+                return (f"prompt needs {n_pg} pages > per-row max_pages "
+                        f"{self.max_pages}")
+            if n_pg > self.n_pages - 1:
+                return (f"prompt needs {n_pg} pages > total pool "
+                        f"capacity {self.n_pages - 1}")
+        return None
+
     def _admit(self) -> None:
         eng = self.eng
         while self.waiting and None in self.slots:
@@ -413,23 +563,24 @@ class ContinuousBatchingScheduler:
             # re-admission after preemption re-prefills the generated
             # prefix too (the checker already advanced past it)
             ids = list(sess.prompt_ids) + list(sess.out_ids)
+            reason = self._admission_reject_reason(len(ids))
+            if reason is not None:
+                # unsatisfiable-by-construction: reject NOW (frees the
+                # queue head for admissible requests behind it) instead
+                # of waiting for pages that can never suffice
+                self.waiting.popleft()
+                self._finish(sess, status="rejected", error=reason)
+                continue
             page_ids = None
             if self.paged:
                 # +1: the first decode write must fit without a new
                 # allocation, or a lone just-admitted row could preempt
                 # itself forever without committing a token
                 n_pg = _ceil_div(len(ids) + 1, self.page_size)
-                if n_pg > self.max_pages:
-                    raise ValueError(
-                        f"request rid={sess.rid} needs {n_pg} pages "
-                        f"> max_pages {self.max_pages}")
+                if self._inject("page_exhaustion", sess):
+                    break      # injected dry pool: backpressure path
                 page_ids = self.pool.alloc(n_pg)
                 if page_ids is None:
-                    if not any(s is not None for s in self.slots) \
-                            and self.pool.available == self.n_pages - 1:
-                        raise ValueError(
-                            f"request rid={sess.rid} needs {n_pg} pages; "
-                            f"pool only holds {self.n_pages - 1}")
                     break          # backpressure: wait for frees (FIFO)
             self.waiting.popleft()
             self._premask.pop(slot, None)
@@ -449,18 +600,26 @@ class ContinuousBatchingScheduler:
             if sess.extra_inputs:
                 inputs.update(sess.extra_inputs)
             t0 = time.perf_counter()
-            logits, row_cache = eng._prefill(eng.params, inputs, row_cache)
-            if self.paged:
-                padded = np.zeros(self.max_pages, np.int32)
-                padded[:len(page_ids)] = page_ids
-                self.cache = self._scatter_paged(
-                    self.cache, row_cache, slot, jnp.asarray(padded))
-                self._page_tbl[slot, :] = 0
-                self._page_tbl[slot, :len(page_ids)] = page_ids
-                self._n_pages_row[slot] = len(page_ids)
-                self._pages_dirty = True
-            else:
-                self.cache = _scatter_row_donate(self.cache, row_cache, slot)
+            try:
+                logits, row_cache = eng._prefill(eng.params, inputs,
+                                                 row_cache)
+                if self.paged:
+                    padded = np.zeros(self.max_pages, np.int32)
+                    padded[:len(page_ids)] = page_ids
+                    self.cache = self._scatter_paged(
+                        self.cache, row_cache, slot, jnp.asarray(padded))
+                    self._page_tbl[slot, :] = 0
+                    self._page_tbl[slot, :len(page_ids)] = page_ids
+                    self._n_pages_row[slot] = len(page_ids)
+                    self._pages_dirty = True
+                else:
+                    self.cache = _scatter_row_donate(self.cache,
+                                                     row_cache, slot)
+            except Exception as e:   # quarantined: reject THIS request
+                if self.paged and page_ids:
+                    self.pool.free(page_ids)
+                self._fail(sess, f"prefill failed: {e!r}")
+                continue
             self._logits = self._logits.at[slot].set(
                 logits[0, -1].astype(jnp.float32))
             sess.model_time += time.perf_counter() - t0
@@ -469,6 +628,8 @@ class ContinuousBatchingScheduler:
             sess.slot = slot
             sess.t_admit = time.perf_counter()
             self.slots[slot] = sess
+            if self._inject("prefill_nan", sess):
+                self._logits = self._logits.at[slot].set(jnp.nan)
 
     def _reset_vacant_lens(self) -> None:
         """Vacant slots' rows are garbage by contract, but every batched
@@ -484,14 +645,52 @@ class ContinuousBatchingScheduler:
         cache["len"] = cache["len"] * occ
         self.cache = cache
 
-    def _finish(self, sess: Session) -> None:
+    def _finish(self, sess: Session, status: Optional[str] = None,
+                error: Optional[str] = None) -> None:
+        """Terminate one session: resolve its terminal status, free its
+        slot and pages, and record it for ``step()``/``run()`` reporting.
+        ``status=None`` resolves to ok/dead_end from the session flags."""
+        if status is not None:
+            sess.status = status
+        if error is not None and sess.error is None:
+            sess.error = error
         sess.finish(self.eng.tok.decode)
         if sess.slot >= 0:
             self._premask.pop(sess.slot, None)
             if self.paged:
                 self._free_slot_pages(sess.slot)
             self.slots[sess.slot] = None
+            sess.slot = -1
+        self.status_counts[sess.result.status] += 1
+        self.finished.append(sess)
         self._finished_now.append(sess)
+
+    def _fail(self, sess: Session, error: str) -> None:
+        """Quarantine a failure to this row: the session terminates with
+        ``internal_error`` (never a silent swallow, never a crash that
+        takes down batch-mates) and its slot/pages free immediately."""
+        self._fail_log.append((sess.rid, error))
+        self._finish(sess, status="internal_error", error=error)
+
+    # -- fault injection sites --------------------------------------------------
+
+    def _inject(self, site: str, sess: Optional[Session] = None) -> bool:
+        """Consult the fault plan at one injection site (no-op without
+        an injector)."""
+        if self.injector is None:
+            return False
+        return self.injector.fire(site,
+                                  rid=None if sess is None else sess.rid)
+
+    def _inject_nan_rows(self, site: str) -> None:
+        """Corrupt staged logits rows per the fault plan.  Detection is
+        NOT short-circuited: the poisoned row flows into the next
+        selection's finiteness check exactly like a real device fault."""
+        if self.injector is None:
+            return
+        for slot, sess in enumerate(self.slots):
+            if sess is not None and self._inject(site, sess):
+                self._logits = self._logits.at[slot].set(jnp.nan)
 
     # -- page bookkeeping -------------------------------------------------------
 
@@ -538,7 +737,8 @@ class ContinuousBatchingScheduler:
                     need[slot] = want
             shortfall = sum(w - int(self._n_pages_row[s])
                             for s, w in need.items())
-            if shortfall <= self.pool.available:
+            if shortfall <= self.pool.available and not (
+                    shortfall and self._inject("page_exhaustion")):
                 break
             victims = [s for s in self.slots if s is not None]
             if not victims:
@@ -586,6 +786,11 @@ class ContinuousBatchingScheduler:
         ``mask_bits`` API (e.g. test stubs) fall back to packing their
         bool mask."""
         ch = sess.checker
+        if self._inject("mask_delay", sess):
+            time.sleep(self.injector.delay_s)
+        if self._inject("mask_error", sess):
+            raise InjectedFault(
+                f"injected mask-build failure (rid={sess.rid})")
         before = getattr(ch, "n_mask_memo_hits", 0)
         t0 = time.perf_counter()
         if hasattr(ch, "mask_bits"):
@@ -620,7 +825,12 @@ class ContinuousBatchingScheduler:
                     and not self._opp_intervened[slot]:
                 self.premask_skips += 1
                 continue
-            m, dt = self._checker_bits(sess)
+            try:
+                m, dt = self._checker_bits(sess)
+            except Exception as e:   # quarantined: evict THIS row only
+                self._fail(sess, "checker failed during overlapped "
+                                 f"prebuild: {e!r}")
+                continue
             self._premask[slot] = m
             built.append((sess, dt))
         return built
@@ -635,11 +845,22 @@ class ContinuousBatchingScheduler:
         sessions; updates intervention stats.  Returns {slot: token}."""
         eng = self.eng
         v = eng._v
-        raw = np.asarray(self._raw_argmax(self._logits))
+        # one fused readback: per-row raw argmax + per-row finiteness over
+        # the real vocab columns (padded columns are legitimately -inf)
+        raw_dev, fin_dev = self._raw_stats(self._logits)
+        raw = np.asarray(raw_dev)
+        finite = np.asarray(fin_dev)
         masks = self._mask_words              # persistent staging buffer
         row_bits: Dict[int, Optional[np.ndarray]] = {}
         for slot, sess in enumerate(self.slots):
             if sess is None:
+                masks[slot] = self._sentinel_row
+                continue
+            if not finite[slot]:
+                # device fault quarantined to THIS row: selection on NaN
+                # logits would commit garbage, so evict it with an
+                # explicit status while batch-mates keep decoding
+                self._fail(sess, "non-finite logits from device step")
                 masks[slot] = self._sentinel_row
                 continue
             ch = sess.checker
@@ -649,24 +870,30 @@ class ContinuousBatchingScheduler:
                 masks[slot] = self._allow_all_row
                 row_bits[slot] = None
                 continue
-            if sess.opportunistic and sess.temperature <= 0.0:
-                t0 = time.perf_counter()
-                ok = ch.check_token(int(raw[slot]))
-                sess.mask_time += time.perf_counter() - t0
-                if ok:
-                    self._opp_intervened[slot] = False
-                    masks[slot, :] = 0
-                    bitmask.set_bit(masks[slot], int(raw[slot]))
-                    row_bits[slot] = None
-                    continue
-                # fast path lost: a full mask is needed this tick, so
-                # next tick's prebuild is worth building again
-                self._opp_intervened[slot] = True
-            m = self._premask.pop(slot, None)   # overlapped prebuild
-            if m is None:
-                m, _dt = self._checker_bits(sess)
-            else:
-                self.premask_hits += 1
+            try:
+                if sess.opportunistic and sess.temperature <= 0.0:
+                    t0 = time.perf_counter()
+                    ok = ch.check_token(int(raw[slot]))
+                    sess.mask_time += time.perf_counter() - t0
+                    if ok:
+                        self._opp_intervened[slot] = False
+                        masks[slot, :] = 0
+                        bitmask.set_bit(masks[slot], int(raw[slot]))
+                        row_bits[slot] = None
+                        continue
+                    # fast path lost: a full mask is needed this tick, so
+                    # next tick's prebuild is worth building again
+                    self._opp_intervened[slot] = True
+                m = self._premask.pop(slot, None)   # overlapped prebuild
+                if m is None:
+                    m, _dt = self._checker_bits(sess)
+                else:
+                    self.premask_hits += 1
+            except Exception as e:   # quarantined: evict THIS row only
+                self._fail(sess, f"checker failed during mask build: "
+                                 f"{e!r}")
+                masks[slot] = self._sentinel_row
+                continue
             if not m.any():
                 sess.dead_end = True
                 self._finish(sess)
@@ -712,19 +939,28 @@ class ContinuousBatchingScheduler:
         live: Dict[int, int] = {}
         for slot, tok in chosen.items():
             sess = self.slots[slot]
+            if sess is None or sess.slot != slot:
+                continue     # evicted between selection and commit
             ch = sess.checker
-            if tok == sess.eos_id:
+            try:
+                if tok == sess.eos_id:
+                    if ch is not None:
+                        ch.advance(tok)
+                    sess.finished_eos = True
+                    self._finish(sess)
+                    continue
+                if ch is not None and sess.speculator is not None \
+                        and hasattr(ch, "clone"):
+                    sess.speculator.observe(ch.state_key(), tok)
                 if ch is not None:
+                    if self._inject("advance_error", sess):
+                        raise InjectedFault(
+                            f"injected advance failure (rid={sess.rid})")
                     ch.advance(tok)
-                sess.finished_eos = True
-                self._finish(sess)
+                    self._premask.pop(slot, None)  # state moved: stale
+            except Exception as e:   # quarantined: evict THIS row only
+                self._fail(sess, f"checker failed during advance: {e!r}")
                 continue
-            if ch is not None and sess.speculator is not None \
-                    and hasattr(ch, "clone"):
-                sess.speculator.observe(ch.state_key(), tok)
-            if ch is not None:
-                ch.advance(tok)
-                self._premask.pop(slot, None)   # state moved: mask stale
             sess.out_ids.append(tok)
             sess.budget -= 1
             if sess.budget <= 0:
@@ -781,6 +1017,7 @@ class ContinuousBatchingScheduler:
         lg = self._run_decode(jnp.asarray(feed, jnp.int32),
                               overlap_fn=self._prebuild_masks)
         self._logits = lg[:, -1].astype(jnp.float32)
+        self._inject_nan_rows("decode_nan")
 
     # -- speculative decode tick (§3.6) -----------------------------------------
 
@@ -814,6 +1051,7 @@ class ContinuousBatchingScheduler:
             lg = self._run_decode(jnp.asarray(feed, jnp.int32),
                                   overlap_fn=self._prebuild_masks)
             self._logits = lg[:, -1].astype(jnp.float32)
+            self._inject_nan_rows("decode_nan")
             self._shrink_pages()       # return the unused verify window
             return
         feed = [[pad] * width for _ in range(self.capacity)]
@@ -833,7 +1071,15 @@ class ContinuousBatchingScheduler:
         # consistent with the decoded cache
         accepted_vec = np.full(self.capacity, width - 1, np.int32)
         for slot, props in proposals.items():
-            accepted_vec[slot] = self._verify_row(slot, props, lg_host[slot])
+            try:
+                accepted_vec[slot] = self._verify_row(slot, props,
+                                                      lg_host[slot])
+            except Exception as e:   # quarantined: evict THIS row only
+                accepted_vec[slot] = 0
+                if self.slots[slot] is not None:
+                    self._fail(self.slots[slot],
+                               f"checker failed during speculative "
+                               f"verify: {e!r}")
         if eng._needs_refeed:
             self._fixup_refeed(snapshot, live, proposals, accepted_vec,
                                lg_dev, width)
@@ -864,6 +1110,10 @@ class ContinuousBatchingScheduler:
         for i, prop in enumerate(props):
             if sess.budget <= 0:
                 break
+            if not np.all(np.isfinite(lg_row[i])):
+                # surfaces as internal_error via the caller's quarantine
+                raise RuntimeError(
+                    "non-finite logits in speculative verify window")
             tok_i = None
             if greedy and int(lg_row[i].argmax()) == prop:
                 t0 = time.perf_counter()
@@ -900,6 +1150,9 @@ class ContinuousBatchingScheduler:
             if tok_i != prop:
                 break
             sess.speculator.observe(ch.state_key(), tok_i)
+            if self._inject("advance_error", sess):
+                raise InjectedFault(
+                    f"injected advance failure (rid={sess.rid})")
             ch.advance(tok_i)
             self._premask.pop(slot, None)   # state moved: mask stale
             accepted += 1

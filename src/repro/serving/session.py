@@ -61,6 +61,25 @@ class GenerationResult:
     # compare against AnalysisReport.max_abstract_fanout to validate the
     # analyzer's ambiguity model on real traffic
     max_hyp_fanout: int = 1
+    # terminal-status taxonomy (fault-tolerant serving).  Exactly one of:
+    #   ok                 normal completion (per-request EOS or budget)
+    #   dead_end           checker state with no legal token (see above)
+    #   deadline_exceeded  the request's wall-clock deadline elapsed
+    #                      (queue wait included) before completion
+    #   cancelled          cancel(rid) took effect at a tick boundary
+    #   rejected           never decoded: unsatisfiable admission demand
+    #                      (prompt pages > pool capacity), bounded-queue
+    #                      load shedding, or queue-wait timeout
+    #   internal_error     a failure quarantined to this row — non-finite
+    #                      logits from the device step, a checker/mask
+    #                      exception — while batch-mates kept decoding
+    status: str = "ok"
+    # human-readable reason accompanying any non-ok status
+    error: Optional[str] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
 
     @property
     def tokens_per_forward(self) -> float:
@@ -108,6 +127,13 @@ class Session:
     # lifecycle (done == result is not None)
     finished_eos: bool = False
     dead_end: bool = False
+    # terminal-status override: the scheduler sets this for
+    # cancelled/deadline_exceeded/rejected/internal_error terminations;
+    # None resolves to "dead_end" or "ok" at finish time
+    status: Optional[str] = None
+    error: Optional[str] = None
+    # set by Scheduler.cancel(rid); honored at the next tick boundary
+    cancel_requested: bool = False
     t_submit: float = dataclasses.field(default_factory=time.perf_counter)
     t_admit: float = 0.0
     t_finish: float = 0.0
@@ -118,6 +144,12 @@ class Session:
     @property
     def temperature(self) -> float:
         return 0.0 if self.decode is None else self.decode.temperature
+
+    @property
+    def deadline_s(self) -> Optional[float]:
+        """Per-request wall-clock deadline (seconds from submit, queue
+        wait included); None defers to the scheduler default."""
+        return getattr(self.decode, "deadline_s", None)
 
     @property
     def rng(self) -> np.random.Generator:
@@ -131,7 +163,12 @@ class Session:
 
     def finish(self, decode_text) -> GenerationResult:
         self.t_finish = time.perf_counter()
+        status = self.status
+        if status is None:
+            status = "dead_end" if self.dead_end else "ok"
         self.result = GenerationResult(
+            status=status,
+            error=self.error,
             text=decode_text(self.out_ids),
             token_ids=list(self.out_ids),
             n_forward_passes=self.n_fwd,

@@ -21,7 +21,13 @@ Rules (AST-based, stdlib only):
       ``random.*`` draws, or ``np.random.*`` (``time.perf_counter`` /
       ``time.monotonic`` are fine — they feed timing *stats*, not
       decisions; per-request ``np.random.Generator`` objects are created
-      outside core/ and passed in).
+      outside core/ and passed in);
+  R4  no swallowed exceptions in ``src/repro/serving/``: a bare
+      ``except:`` or a handler whose body is only ``pass``/``...``
+      hides a failure that the fault-tolerance layer (PR 7) must map to
+      an explicit per-request terminal status (``internal_error``,
+      ``rejected``, ...) — silent constraint-engine failures corrupt
+      downstream results without a trace.
 
 A finding is suppressed by putting ``# hotpath-lint: allow`` on the
 offending physical line (or the line above it).  Every suppression is a
@@ -47,7 +53,7 @@ TICK_FUNCS: Set[str] = {
     "step", "_verify_width", "_reset_vacant_lens", "_checker_bits",
     "_prebuild_masks", "_choose", "_commit_first", "_run_decode",
     "_plain_step", "_spec_step", "_verify_row", "_fixup_refeed",
-    "_ensure_pages", "_shrink_pages", "_sync_pages",
+    "_ensure_pages", "_shrink_pages", "_sync_pages", "_reap",
 }
 
 ALLOC_FUNCS = {"zeros", "ones", "empty", "full", "tile"}
@@ -180,6 +186,46 @@ def lint_core_determinism(path: str) -> List[Finding]:
     return out
 
 
+def _swallows(handler: ast.ExceptHandler) -> bool:
+    """Handler body does nothing but pass / ``...`` (a swallowed
+    exception)."""
+    for stmt in handler.body:
+        if isinstance(stmt, ast.Pass):
+            continue
+        if isinstance(stmt, ast.Expr) \
+                and isinstance(stmt.value, ast.Constant) \
+                and stmt.value.value is Ellipsis:
+            continue
+        return False
+    return True
+
+
+def lint_serving_excepts(path: str) -> List[Finding]:
+    with open(path) as f:
+        src = f.read()
+    lines = src.splitlines()
+    tree = ast.parse(src, path)
+    out: List[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        if _has_pragma(lines, node.lineno):
+            continue
+        if node.type is None:
+            out.append(Finding(
+                path, node.lineno, "R4",
+                "bare `except:` in serving/ — catches SystemExit/"
+                "KeyboardInterrupt too; catch Exception and map the "
+                "failure to an explicit per-request terminal status"))
+        elif _swallows(node):
+            out.append(Finding(
+                path, node.lineno, "R4",
+                "swallowed exception (handler body is only pass/...) in "
+                "serving/ — a failure here must surface as a request "
+                "status (internal_error / rejected), never vanish"))
+    return out
+
+
 def main(argv: List[str]) -> int:
     if argv:
         targets = [os.path.abspath(a) for a in argv]
@@ -189,6 +235,7 @@ def main(argv: List[str]) -> int:
     dispatch = os.path.join(REPO, "src", "repro", "kernels",
                             "masked_sample", "ops.py")
     core_dir = os.path.join(REPO, "src", "repro", "core")
+    serving_dir = os.path.join(REPO, "src", "repro", "serving")
 
     findings: List[Finding] = []
     if targets is None or sched in targets:
@@ -199,6 +246,10 @@ def main(argv: List[str]) -> int:
         path = os.path.join(core_dir, fn)
         if fn.endswith(".py") and (targets is None or path in targets):
             findings.extend(lint_core_determinism(path))
+    for fn in sorted(os.listdir(serving_dir)):
+        path = os.path.join(serving_dir, fn)
+        if fn.endswith(".py") and (targets is None or path in targets):
+            findings.extend(lint_serving_excepts(path))
 
     for f in findings:
         print(f)
