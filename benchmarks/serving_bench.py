@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import json
 import pathlib
+import subprocess
 import time
 
 import jax
@@ -34,8 +35,8 @@ from repro.core import grammars
 from repro.core.sampling import GrammarSampler
 from repro.models import build_model
 from repro.serving import (ConstraintSpec, ContinuousBatchingScheduler,
-                           DecodeParams, FaultInjector, Request,
-                           ServingEngine)
+                           DecodeParams, EngineConfig, FaultInjector,
+                           Request, ServingEngine)
 from repro.tokenizer import train_bpe
 
 N_REQUESTS = 24
@@ -53,6 +54,27 @@ MODEL = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
              dtype="float32", max_seq_len=512)
 
 PROMPTS = ["a: ", "record: ", "x = ", "{", "fn: ", "data -> "]
+
+# device-loop vs host-loop comparison (ISSUE 8): certified-JSON-only
+# workload on a byte-complete vocabulary (the json grammar certifies
+# CLEAN there, so the engine uploads a device table), greedy rows —
+# exactly the population the fused loop accelerates
+SYNC_N = 8
+DEV_N_REQUESTS = 16
+DEV_MAX_TOKENS = 32
+HISTORY_PATH = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_history.jsonl"
+
+
+def _git_sha() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=pathlib.Path(__file__).resolve().parent)
+        return out.stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
 
 
 def _setup() -> ServingEngine:
@@ -119,6 +141,8 @@ def _drive(eng: ServingEngine, injector=None, label="fault_free",
         "latency_p99_s": float(np.percentile(lat, 99)),
         "n_forward_passes": sched.n_fwd,
         "n_preemptions": sched.n_preempt,
+        "n_host_syncs": sched.n_host_syncs,
+        "host_syncs_per_token": sched.n_host_syncs / max(n_tok, 1),
         "statuses": statuses,
         "n_faults_fired": 0 if injector is None else injector.n_fired(),
         "fault_sites": {} if injector is None else {
@@ -143,6 +167,97 @@ def _drive(eng: ServingEngine, injector=None, label="fault_free",
     return rec
 
 
+def _setup_certified() -> ServingEngine:
+    """Byte-vocab engine whose json grammar certifies CLEAN, so
+    ``device_tables=True`` actually uploads a table."""
+    g = grammars.load("json")
+    corpus = GrammarSampler(g, seed=5).corpus(80)
+    tok = train_bpe(corpus, vocab_size=257)
+    cfg = ModelConfig(arch_id="serve-bench-dev", family="dense",
+                      vocab_size=tok.vocab_size, **MODEL)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(m, params, tok, g,
+                        EngineConfig(mode="domino",
+                                     max_tokens=DEV_MAX_TOKENS),
+                        max_len=256, device_tables=True)
+    eng.register_grammar("json", g)
+    eng.precompute()
+    assert "json" in eng.device_tables, \
+        "json failed to certify on the byte vocabulary"
+    return eng
+
+
+def _drive_loop(eng: ServingEngine, device_loop: bool, label: str,
+                verbose=True):
+    """One drain pass of the certified-JSON workload.  Warm requests run
+    through the SAME scheduler first (the fused loop compiles per
+    scheduler instance), then counters reset and the measured batch is
+    submitted up front — a sustained-throughput drain, no arrival
+    process to hide the per-token host syncs behind."""
+    sched = ContinuousBatchingScheduler(eng, capacity=CAPACITY,
+                                        page_size=32,
+                                        device_loop=device_loop,
+                                        sync_n=SYNC_N,
+                                        debug_invariants=True)
+    for p in PROMPTS[:CAPACITY]:
+        sched.submit(Request(p, ConstraintSpec(grammar="json",
+                                               mode="domino"),
+                             DecodeParams(max_tokens=SYNC_N + 2)))
+    sched.run()                               # compile warm-up
+    sched.n_host_syncs = sched.n_device_tokens = sched.n_fwd = 0
+    sessions = [sched.submit(
+        Request(PROMPTS[i % len(PROMPTS)],
+                ConstraintSpec(grammar="json", mode="domino"),
+                DecodeParams(max_tokens=DEV_MAX_TOKENS, seed=i)))
+        for i in range(DEV_N_REQUESTS)]
+    t0 = time.perf_counter()
+    results = sched.run()
+    wall = time.perf_counter() - t0
+    lat = np.array([s.result.wall_time_s for s in sessions])
+    n_tok = sum(r.n_tokens for r in results)
+    assert all(r.status == "ok" for r in results), \
+        {r.status for r in results}
+    rec = {
+        "label": label,
+        "wall_s": wall,
+        "n_requests": len(sessions),
+        "n_tokens": n_tok,
+        "tok_per_s": n_tok / wall,
+        "latency_p50_s": float(np.percentile(lat, 50)),
+        "latency_p99_s": float(np.percentile(lat, 99)),
+        "n_host_syncs": sched.n_host_syncs,
+        "host_syncs_per_token": sched.n_host_syncs / max(n_tok, 1),
+        "n_device_tokens": sched.n_device_tokens,
+        "n_quotient_escapes": sched.n_quotient_escapes,
+        "n_table_rejects": sched.n_table_rejects,
+    }
+    if verbose:
+        print(f"  [serving/{label}] {n_tok} tok in {wall:.2f}s "
+              f"({rec['tok_per_s']:.1f} tok/s), "
+              f"syncs/tok={rec['host_syncs_per_token']:.3f}, "
+              f"device_tokens={sched.n_device_tokens}", flush=True)
+    emit(f"serving_{label}_tok_per_s", 1e6 / max(rec["tok_per_s"], 1e-9),
+         f"{rec['tok_per_s']:.1f} tok/s")
+    return rec
+
+
+def _append_history(rows, path=HISTORY_PATH):
+    """Append per-PR benchmark rows to the tracked JSONL history — one
+    line per (commit, label), so the perf trajectory across PRs is a
+    diffable artifact, not a dashboard."""
+    sha = _git_sha()
+    ts = time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())
+    keep = ("label", "tok_per_s", "latency_p50_s", "latency_p99_s",
+            "host_syncs_per_token", "n_tokens", "n_device_tokens",
+            "n_quotient_escapes", "n_table_rejects")
+    with open(path, "a") as f:
+        for row in rows:
+            slim = {k: row[k] for k in keep if k in row}
+            f.write(json.dumps({"git_sha": sha, "ts": ts, **slim},
+                               sort_keys=True) + "\n")
+
+
 def run(verbose: bool = True, json_path: str = "BENCH_serving.json"):
     eng = _setup()
     # warm compile out of the measured window: one small batch end to end
@@ -159,18 +274,45 @@ def run(verbose: bool = True, json_path: str = "BENCH_serving.json"):
     injector = FaultInjector(seed=0, rates=FAULT_RATES, max_faults=30)
     faulted = _drive(eng, injector=injector, label="faulted",
                      verbose=verbose)
+
+    # device-resident fused loop vs per-token host loop (ISSUE 8)
+    eng_dev = _setup_certified()
+    host_loop = _drive_loop(eng_dev, device_loop=False, label="host_loop",
+                            verbose=verbose)
+    device_loop = _drive_loop(eng_dev, device_loop=True,
+                              label="device_loop", verbose=verbose)
+    speedup = device_loop["tok_per_s"] / host_loop["tok_per_s"]
+    # acceptance bars: sustained speedup AND the sync economy it rests on
+    assert speedup >= 1.5, \
+        f"device loop speedup {speedup:.2f}x < 1.5x"
+    assert device_loop["host_syncs_per_token"] <= 1 / SYNC_N + 0.05, \
+        device_loop["host_syncs_per_token"]
+    if verbose:
+        print(f"  [serving] device-loop speedup {speedup:.2f}x",
+              flush=True)
+
     record = {
         "config": {"n_requests": N_REQUESTS, "capacity": CAPACITY,
                    "max_tokens": MAX_TOKENS,
                    "arrival_rate_hz": ARRIVAL_RATE_HZ,
                    "fault_rates": FAULT_RATES,
-                   "grammars": ["json", "c", "unconstrained"]},
+                   "grammars": ["json", "c", "unconstrained"],
+                   "sync_n": SYNC_N,
+                   "dev_n_requests": DEV_N_REQUESTS,
+                   "dev_max_tokens": DEV_MAX_TOKENS},
         "fault_free": fault_free,
         "faulted": faulted,
+        "host_loop": host_loop,
+        "device_loop": device_loop,
+        "device_speedup": speedup,
     }
     pathlib.Path(json_path).write_text(json.dumps(record, indent=2))
+    _append_history([{**fault_free, "label": "fault_free"},
+                     {**faulted, "label": "faulted"},
+                     host_loop, device_loop])
     if verbose:
-        print(f"  [serving] wrote {json_path}", flush=True)
+        print(f"  [serving] wrote {json_path} and appended "
+              f"{HISTORY_PATH.name}", flush=True)
     return record
 
 

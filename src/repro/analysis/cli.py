@@ -54,6 +54,13 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--max-states", type=int, default=DEFAULT_MAX_STATES,
                     help="abstract state budget before the closure is "
                          "declared non-finite (default %(default)s)")
+    ap.add_argument("--emit-device-table", action="store_true",
+                    help="assemble the device grammar table from each "
+                         "clean closure certificate and report its "
+                         "shape/footprint (what the serving engine "
+                         "uploads under device_tables=True); grammars "
+                         "whose certificate is not clean report the "
+                         "refusal reason instead")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write the full reports as JSON")
     ap.add_argument("--quiet", action="store_true",
@@ -75,14 +82,16 @@ def main(argv: Optional[List[str]] = None) -> int:
     reports = {}
     for name in names:
         if name in zoo.GRAMMARS:
-            reports.update(run_batch([name], vocab, eos_id, args.clamp,
-                                     args.max_states))
+            reports.update(run_batch(
+                [name], vocab, eos_id, args.clamp, args.max_states,
+                emit_device_table=args.emit_device_table))
         elif os.path.exists(name):
             with open(name) as f:
                 g = parse_grammar(f.read())
-            reports[name] = analyze(g, vocab, eos_id, name=name,
-                                    clamp=args.clamp,
-                                    max_states=args.max_states)
+            reports[name] = analyze(
+                g, vocab, eos_id, name=name, clamp=args.clamp,
+                max_states=args.max_states,
+                emit_device_table=args.emit_device_table)
         else:
             print(f"error: {name!r} is neither a zoo grammar nor a file "
                   f"(zoo: {', '.join(sorted(zoo.GRAMMARS))})",
@@ -95,6 +104,27 @@ def main(argv: Optional[List[str]] = None) -> int:
         else:
             print(rep.summary())
             print()
+        if args.emit_device_table:
+            tbl = rep.device_table
+            if tbl is not None:
+                print(f"{name}: device table CERTIFIED — "
+                      f"{tbl.n_states} states, masks "
+                      f"{tbl.mask_table.shape} + trans {tbl.trans.shape}"
+                      f" = {tbl.n_bytes / 1024:.0f} KiB")
+            else:
+                why = []
+                if not rep.closure.finite:
+                    why.append("closure not finite")
+                if rep.n_mask_conflicts:
+                    why.append(f"{rep.n_mask_conflicts} mask conflicts")
+                if rep.n_hyp_truncations:
+                    why.append(f"{rep.n_hyp_truncations} hypothesis "
+                               "truncations")
+                if rep.traps:
+                    why.append(f"{len(rep.traps)} trap states")
+                print(f"{name}: device table REFUSED — "
+                      f"{'; '.join(why) or 'no exploration masks'} "
+                      f"(rows for this grammar serve on the host path)")
     if args.json:
         write_json(reports, args.json)
         print(f"wrote {args.json}")

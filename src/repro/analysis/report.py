@@ -21,13 +21,15 @@ def bytes_vocab() -> Tuple[List[Optional[bytes]], int]:
 
 def run_batch(names: Sequence[str], vocab: Sequence[Optional[bytes]],
               eos_id: int, clamp: int, max_states: int,
-              progress=None) -> Dict[str, AnalysisReport]:
+              progress=None,
+              emit_device_table: bool = False) -> Dict[str, AnalysisReport]:
     """Analyze each named zoo grammar; returns name -> report."""
     out: Dict[str, AnalysisReport] = {}
     for name in names:
         g = zoo.load(name)
         rep = analyze(g, vocab, eos_id, name=name, clamp=clamp,
-                      max_states=max_states)
+                      max_states=max_states,
+                      emit_device_table=emit_device_table)
         out[name] = rep
         if progress is not None:
             progress(rep)

@@ -83,6 +83,10 @@ from repro.core.trees import TreeCache
 POLICIES = ("off", "warn", "strict")
 DEFAULT_MAX_STATES = 2048
 DEFAULT_CLAMP = 8
+# transition-table sentinel: "this (state, token) edge leaves the
+# precomputed frontier" — the serving scheduler falls the row back to the
+# host path when its state id goes negative
+OFF_FRONTIER = -1
 # every Nth merge onto a known abstract state re-derives the mask and
 # compares it against the representative's (quotient-soundness sampling)
 MERGE_CHECK_STRIDE = 7
@@ -138,6 +142,50 @@ class ClosureCertificate:
 
 
 @dataclasses.dataclass
+class DeviceGrammarTable:
+    """Device-residency payload for one certified grammar.
+
+    ``mask_table[sid]`` is state ``sid``'s packed legality bitset (the
+    exact array ``DominoDecoder.mask_bits()`` returns in that state, EOS
+    bit included) and ``trans[sid, tok]`` is the state reached by
+    advancing ``tok`` — :data:`OFF_FRONTIER` for tokens the mask forbids
+    and for EOS (an absorbing final state the loop checks explicitly).
+    Uploaded once per grammar by ``ServingEngine.precompute()``; the
+    scheduler's fused decode loop then gathers each row's mask from
+    ``mask_table[state]`` and advances ``state = trans[state, tok]``
+    entirely on device, syncing to the host only every N tokens.
+
+    Only built from a CLEAN closure certificate (finite, zero merge
+    conflicts, zero hypothesis truncations, zero trap states), so inside
+    the table: every masked-argmax pick has a recorded transition, no
+    reachable state has an empty mask, and the table mask is bitwise
+    equal to the concrete checker's mask at the same state.
+
+    Memory: ``n_states * ceil(V/32) * 4`` bytes of masks plus
+    ``n_states * V * 4`` bytes of (dense int32) transitions.
+    """
+    n_states: int
+    v: int                     # vocabulary size (table column count)
+    eos_id: int
+    clamp: int                 # abstract_key clamp the states are keyed by
+    mask_table: np.ndarray     # (n_states, ceil(V/32)) uint32
+    trans: np.ndarray          # (n_states, V) int32, OFF_FRONTIER sentinel
+    key_to_sid: Dict[Tuple, int] = dataclasses.field(default_factory=dict,
+                                                     repr=False)
+
+    @property
+    def n_bytes(self) -> int:
+        return int(self.mask_table.nbytes + self.trans.nbytes)
+
+    def sid_for(self, decoder) -> int:
+        """State id of ``decoder``'s current abstract state, or
+        :data:`OFF_FRONTIER` when the state is outside the table (the
+        caller must then stay on / fall back to the host path)."""
+        return self.key_to_sid.get(decoder.abstract_key(self.clamp),
+                                   OFF_FRONTIER)
+
+
+@dataclasses.dataclass
 class AnalysisReport:
     grammar_name: str
     vocab_size: int
@@ -161,6 +209,11 @@ class AnalysisReport:
     # GenerationResult.n_hyp_truncations will fire on real traffic.
     n_hyp_truncations: int
     analysis_time_s: float
+    # populated by analyze(..., emit_device_table=True) when — and only
+    # when — the closure certificate is clean (finite, zero merge
+    # conflicts, zero truncations, zero traps): the packed-mask +
+    # transition tables the device-resident decode loop uploads
+    device_table: Optional[DeviceGrammarTable] = None
 
     # -- verdicts ----------------------------------------------------------
 
@@ -239,6 +292,13 @@ class AnalysisReport:
             "n_mask_conflicts": self.n_mask_conflicts,
             "n_hyp_truncations": self.n_hyp_truncations,
             "analysis_time_s": self.analysis_time_s,
+            "device_table": None if self.device_table is None else {
+                "n_states": self.device_table.n_states,
+                "v": self.device_table.v,
+                "mask_bytes": int(self.device_table.mask_table.nbytes),
+                "trans_bytes": int(self.device_table.trans.nbytes),
+                "total_bytes": self.device_table.n_bytes,
+            },
             "ok": self.ok(),
             "problems": self.problems(),
         }
@@ -523,6 +583,15 @@ class Exploration:
     # hypothesis set: runtime masks beyond such an edge may be UNSOUND
     # (legal tokens silently excluded)
     n_hyp_truncations: int
+    # forward transition structure (the device-table feedstock):
+    # edges[sid][tok] = successor state id for every explored
+    # (mask-legal, non-EOS) edge; masks[sid] = the representative's
+    # packed mask row (a reference to the memoized read-only array);
+    # key_ids = abstract key -> state id
+    edges: Dict[int, Dict[int, int]] = dataclasses.field(
+        default_factory=dict)
+    masks: Dict[int, np.ndarray] = dataclasses.field(default_factory=dict)
+    key_ids: Dict[Tuple, int] = dataclasses.field(default_factory=dict)
 
 
 def explore_decoder(g: Grammar, vocab: Sequence[Optional[bytes]],
@@ -544,6 +613,8 @@ def explore_decoder(g: Grammar, vocab: Sequence[Optional[bytes]],
     eos_ok: Dict[int, bool] = {}
     empty_mask: Dict[int, bool] = {}
     rev: Dict[int, Set[int]] = collections.defaultdict(set)
+    fwd: Dict[int, Dict[int, int]] = collections.defaultdict(dict)
+    masks: Dict[int, np.ndarray] = {}
     queue = collections.deque([0])
     finite = True
     n_edges = 0
@@ -562,6 +633,7 @@ def explore_decoder(g: Grammar, vocab: Sequence[Optional[bytes]],
             d = reps[sid]
             max_fanout = max(max_fanout, len(d.hyps))
             bits = d.mask_bits()
+            masks[sid] = bits          # shared read-only memo reference
             eos_ok[sid] = bitmask.get_bit(bits, eos_id)
             legal = bitmask.to_ids(bits, v)
             empty_mask[sid] = legal.size == 0
@@ -599,13 +671,65 @@ def explore_decoder(g: Grammar, vocab: Sequence[Optional[bytes]],
                                               reps[tid].mask_bits()):
                             n_conflicts += 1
                 rev[tid].add(sid)
+                fwd[sid][tok] = tid
                 n_edges += 1
     return Exploration(finite=finite, n_states=len(ids), n_edges=n_edges,
                        eos_ok=eos_ok, empty_mask=empty_mask, paths=paths,
                        rev_edges=dict(rev), max_fanout=max_fanout,
                        n_merge_checks=n_checks,
                        n_mask_conflicts=n_conflicts,
-                       n_hyp_truncations=n_truncs)
+                       n_hyp_truncations=n_truncs,
+                       edges=dict(fwd), masks=masks, key_ids=dict(ids))
+
+
+def build_device_table(ex: Exploration, v: int, eos_id: int,
+                       clamp: int) -> Optional[DeviceGrammarTable]:
+    """Assemble the :class:`DeviceGrammarTable` from an exploration —
+    or refuse (return None) unless the closure certificate is CLEAN:
+
+     - ``finite`` — the explored graph is the whole reachable quotient
+       (a clipped frontier would make OFF_FRONTIER lie);
+     - zero mask conflicts — no explored merge arrived with a mask
+       different from its representative's;
+     - zero hypothesis truncations — no explored edge overflowed
+       MAX_HYPOTHESES, so no mask in the table is potentially unsound;
+     - zero trap states — the fused loop's masked argmax always has at
+       least one legal token to pick (dead ends would otherwise need
+       in-loop detection that the host path handles explicitly).
+
+    Every non-EOS token a table mask allows has a recorded transition,
+    so a table walk can only stop at EOS, budget, or an OFF_FRONTIER
+    edge — which never appears under a clean certificate.
+
+    SCOPE OF THE CERTIFICATE: the key quotient is an *abstraction* — the
+    clamped relative signature deliberately folds state a context-free
+    grammar can keep unbounded (e.g. JSON's bracket-nesting stack), so a
+    finite table cannot be exact in general.  "Zero mask conflicts"
+    certifies every merge the BFS *observed*, not bisimilarity: a
+    concrete trajectory can eventually reach a state whose mask differs
+    from its table row (a QUOTIENT ESCAPE).  Consumers must therefore
+    (a) validate every table-selected token against the concrete checker
+    (``advance`` returning False is a certificate violation, never to be
+    committed silently), and (b) periodically audit the table mask row
+    against the concrete mask, demoting escaped rows to the exact host
+    path — the serving scheduler does both, bounding any divergence from
+    the host path to one audit interval while output stays
+    grammar-valid unconditionally."""
+    clean = (ex.finite and ex.n_mask_conflicts == 0
+             and ex.n_hyp_truncations == 0
+             and not any(ex.empty_mask.values()))
+    if not clean or not ex.masks:
+        return None
+    w = bitmask.n_words(v)
+    mask_table = np.zeros((ex.n_states, w), np.uint32)
+    trans = np.full((ex.n_states, v), OFF_FRONTIER, np.int32)
+    for sid in range(ex.n_states):
+        mask_table[sid] = ex.masks[sid]
+        for tok, tid in ex.edges.get(sid, {}).items():
+            trans[sid, tok] = tid
+    return DeviceGrammarTable(n_states=ex.n_states, v=v, eos_id=eos_id,
+                              clamp=clamp, mask_table=mask_table,
+                              trans=trans, key_to_sid=dict(ex.key_ids))
 
 
 def _replay_trap(g: Grammar, vocab: Sequence[Optional[bytes]], eos_id: int,
@@ -632,7 +756,8 @@ def analyze(g: Grammar, vocab: Sequence[Optional[bytes]], eos_id: int,
             tree_cache: Optional[TreeCache] = None,
             clamp: int = DEFAULT_CLAMP,
             max_states: int = DEFAULT_MAX_STATES,
-            max_witnesses: int = 16) -> AnalysisReport:
+            max_witnesses: int = 16,
+            emit_device_table: bool = False) -> AnalysisReport:
     """Run both analysis layers and assemble the :class:`AnalysisReport`.
 
     ``tree_cache`` should be the grammar's registry-shared cache when
@@ -640,6 +765,11 @@ def analyze(g: Grammar, vocab: Sequence[Optional[bytes]], eos_id: int,
     serving later uses (the analysis doubles as the precompute warm-up).
     ``max_witnesses`` caps how many trap / non-live witnesses are
     materialized (the counts are always exact).
+    ``emit_device_table`` additionally assembles the
+    :class:`DeviceGrammarTable` from the exploration (clean certificates
+    only — see :func:`build_device_table`); it is opt-in because the
+    dense ``(n_states, V)`` transition table costs ``n_states * V * 4``
+    bytes of host memory that pure diagnostics never need.
     """
     t0 = time.perf_counter()
     issues = analyze_static(g)
@@ -698,4 +828,6 @@ def analyze(g: Grammar, vocab: Sequence[Optional[bytes]], eos_id: int,
         n_merge_checks=ex.n_merge_checks,
         n_mask_conflicts=ex.n_mask_conflicts,
         n_hyp_truncations=ex.n_hyp_truncations,
+        device_table=(build_device_table(ex, len(vocab), eos_id, clamp)
+                      if emit_device_table else None),
         analysis_time_s=time.perf_counter() - t0)

@@ -164,6 +164,12 @@ class TreeCache:
         self.mask_memo: "collections.OrderedDict[object, np.ndarray]" = \
             collections.OrderedDict()
         self.mask_memo_max = 4096
+        # device-resident decode table for this grammar (attached by
+        # ServingEngine.build_device_tables when the closure certificate
+        # is clean): a repro.core.analysis.DeviceGrammarTable, or None.
+        # Kept on the cache so everything per-grammar that serving shares
+        # lives in one object.
+        self.device_table = None
 
     def tree(self, position) -> SubterminalTree:
         key = position

@@ -55,6 +55,18 @@ def main() -> None:
                     help="bound the scheduler's waiting queue: overflow "
                          "submissions are shed immediately with status "
                          "rejected (default: unbounded)")
+    ap.add_argument("--device-tables", action="store_true",
+                    help="build device grammar tables at precompute for "
+                         "every registered grammar that certifies clean "
+                         "(finite closure, no mask conflicts/truncations)")
+    ap.add_argument("--device-loop", action="store_true",
+                    help="run certified greedy rows through the fused "
+                         "device-resident decode loop: one host sync per "
+                         "--sync-n tokens instead of per token "
+                         "(implies --device-tables)")
+    ap.add_argument("--sync-n", type=int, default=8,
+                    help="fused-loop block length: decode steps committed "
+                         "on device between host syncs")
     ap.add_argument("--analyze", default="off",
                     choices=["off", "warn", "strict"],
                     help="registration-time grammar analysis policy: "
@@ -105,8 +117,10 @@ def main() -> None:
         model = build_model(cfg)
 
     # ONE engine, one KV pool: constraints ride on each Request
+    device_tables = args.device_tables or args.device_loop
     engine = ServingEngine(model, params, tok, max_len=1024,
-                           analysis_policy=args.analyze)
+                           analysis_policy=args.analyze,
+                           device_tables=device_tables)
     for name, g in loaded.items():
         engine.register_grammar(name, g)   # analyzed per --analyze policy
     engine.precompute()                 # warm every registered grammar
@@ -116,6 +130,14 @@ def main() -> None:
               f"({rep.closure.n_states} states, "
               f"{'finite' if rep.closure.finite else 'open'}, "
               f"{rep.analysis_time_s:.2f}s)")
+    if device_tables:
+        for name, tbl in engine.device_tables.items():
+            print(f"[device-table] {name}: {tbl.n_states} states, "
+                  f"{tbl.n_bytes / 1024:.0f} KiB uploaded")
+        missing = set(loaded) - set(engine.device_tables)
+        if missing:
+            print(f"[device-table] not certified (host path): "
+                  f"{','.join(sorted(missing))}")
 
     decode = DecodeParams(
         temperature=args.temperature, max_tokens=args.max_tokens,
@@ -155,7 +177,8 @@ def main() -> None:
             requests, max_batch=args.slots,
             paged=False if args.no_paged else None,
             page_size=args.page_size, n_pages=args.pool_pages,
-            queue_limit=args.queue_limit)
+            queue_limit=args.queue_limit,
+            device_loop=args.device_loop, sync_n=args.sync_n)
     else:
         results = [engine.generate(r) for r in requests]
     for lbl, req, r in zip(labels, requests, results):
@@ -163,8 +186,10 @@ def main() -> None:
         print(f"    out[status={r.status}, {r.n_tokens} toks, "
               f"{r.n_forward_passes} fwd, "
               f"{r.n_interventions} interventions, "
-              f"spec {r.n_spec_accepted}/{r.n_spec_proposed}]: "
-              f"{r.text[:120]!r}"
+              f"spec {r.n_spec_accepted}/{r.n_spec_proposed}"
+              + (f", {r.n_device_tokens} device-committed"
+                 if args.device_loop else "")
+              + f"]: {r.text[:120]!r}"
               + (f" error={r.error}" if r.error else ""))
 
 

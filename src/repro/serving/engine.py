@@ -69,7 +69,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bitmask
-from repro.core.analysis import AnalysisReport, analyze, enforce
+from repro.core.analysis import (OFF_FRONTIER, AnalysisReport,
+                                 DeviceGrammarTable, analyze, enforce)
 from repro.core.baselines import TemplateSession
 from repro.core.grammar import Grammar
 from repro.core.scanner import Scanner
@@ -136,6 +137,58 @@ class _RowPolicy:
         return self._rng
 
 
+class DeviceTableSet:
+    """All certified grammars' :class:`DeviceGrammarTable`\\ s merged into
+    ONE device-resident pair of arrays so the scheduler's fused loop can
+    gather any row's mask with a single index, whatever grammar the row
+    decodes under:
+
+      ``mask_dev``  — ``(total_states, ceil(V/32))`` uint32 packed masks
+      ``trans_dev`` — ``(total_states, V)`` int32 token→next-state table
+
+    Per-grammar state ids are offset into the concatenated range
+    (``offsets[name]``); ``OFF_FRONTIER`` (negative) edges stay negative
+    after offsetting, so a state id ``< 0`` ALWAYS means "host path".
+    Host mirrors (``mask_host`` / ``trans_host``) serve the scheduler's
+    per-token bookkeeping (transition lookups, opportunistic bit tests)
+    without device readbacks.  Built once by
+    :meth:`ServingEngine.build_device_tables`; immutable afterwards."""
+
+    def __init__(self, tables: Dict[str, DeviceGrammarTable]):
+        names = sorted(tables)
+        self.tables = {n: tables[n] for n in names}
+        self.offsets: Dict[str, int] = {}
+        masks, trans = [], []
+        off = 0
+        for n in names:
+            t = tables[n]
+            self.offsets[n] = off
+            masks.append(t.mask_table)
+            tr = t.trans.astype(np.int32, copy=True)
+            tr[tr >= 0] += off          # remap edges into the concat range
+            trans.append(tr)
+            off += t.n_states
+        self.n_states = off
+        self.mask_host = np.concatenate(masks, axis=0)
+        self.trans_host = np.concatenate(trans, axis=0)
+        self.mask_dev = jnp.asarray(self.mask_host)
+        self.trans_dev = jnp.asarray(self.trans_host)
+
+    @property
+    def n_bytes(self) -> int:
+        return int(self.mask_host.nbytes + self.trans_host.nbytes)
+
+    def sid_for(self, name: str, checker) -> int:
+        """Global state id for ``checker``'s current state under grammar
+        ``name``, or ``OFF_FRONTIER`` when the grammar has no table or
+        the state is outside the certified frontier."""
+        off = self.offsets.get(name)
+        if off is None:
+            return OFF_FRONTIER
+        sid = self.tables[name].sid_for(checker)
+        return sid + off if sid >= 0 else OFF_FRONTIER
+
+
 class ServingEngine:
     def __init__(self, model: Model, params, tok: BPETokenizer,
                  grammar: Optional[Grammar] = None,
@@ -144,7 +197,8 @@ class ServingEngine:
                  count_model: Optional[CountModel] = None,
                  max_len: int = 1024,
                  analysis_policy: str = "off",
-                 max_adhoc_grammars: int = 32):
+                 max_adhoc_grammars: int = 32,
+                 device_tables: bool = False):
         self.model = model
         self.params = params
         self.tok = tok
@@ -159,6 +213,16 @@ class ServingEngine:
         #            (raises AnalysisError BEFORE the registry commits)
         self.analysis_policy = analysis_policy
         self.analysis_reports: Dict[str, AnalysisReport] = {}
+        # device-resident decode tables (ISSUE 8): when enabled,
+        # precompute() uploads each CLEANLY-certified grammar's packed
+        # mask + transition tables so the scheduler's fused loop can run
+        # N tokens per host sync.  Grammars whose certificate is dirty
+        # (non-finite closure, merge conflicts, truncations, traps) are
+        # silently left on the host path — correctness never depends on
+        # certification, only the sync cadence does.
+        self.enable_device_tables = device_tables
+        self.device_tables: Dict[str, DeviceGrammarTable] = {}
+        self._device_table_set: Optional[DeviceTableSet] = None
         # refcounts + ad-hoc bookkeeping so rotating per-request Grammar
         # objects does not leak (TreeCache, mask memo) pairs forever
         self._grammar_refs: Dict[str, int] = {}
@@ -355,7 +419,59 @@ class ServingEngine:
             stats = tc.precompute()
             out["positions"] += stats["positions"]
             out["seconds"] += stats["seconds"]
+        if self.enable_device_tables:
+            out["device_table_seconds"] = self.build_device_tables()
         return out
+
+    def build_device_tables(self) -> float:
+        """Build + upload a :class:`DeviceGrammarTable` for every
+        registered grammar whose closure certificate is CLEAN (finite,
+        zero merge conflicts, zero hypothesis truncations, zero traps,
+        and an overall-``ok()`` report); dirty grammars stay host-only.
+
+        A grammar with a STORED report is judged by that report — never
+        re-analyzed behind its back — so a certificate that was
+        downgraded (e.g. by a stricter re-analysis, or a test doctoring
+        conflicts in) durably excludes the grammar from the device path.
+        Grammars without a stored report are analyzed here with
+        ``emit_device_table=True`` on their shared TreeCache.  Returns
+        the seconds spent analyzing."""
+        spent = 0.0
+        for name, (grammar, tc) in list(self.registry.items()):
+            if tc is None or name in self.device_tables:
+                continue
+            report = self.analysis_reports.get(name)
+            if report is None:
+                report = analyze(grammar, list(self.tok.vocab),
+                                 self.tok.eos_id, name=name,
+                                 tree_cache=tc, emit_device_table=True)
+                self.analysis_reports[name] = report
+                spent += report.analysis_time_s
+            elif report.device_table is None:
+                # stored report: trust its certificate.  Dirty -> skip
+                # WITHOUT re-analysis (the downgrade stands); clean but
+                # table-less (analyzed without emit) -> re-run with emit.
+                if (not report.closure.finite or report.n_mask_conflicts
+                        or report.n_hyp_truncations or not report.ok()):
+                    continue
+                report = analyze(grammar, list(self.tok.vocab),
+                                 self.tok.eos_id, name=name,
+                                 tree_cache=tc, emit_device_table=True)
+                self.analysis_reports[name] = report
+                spent += report.analysis_time_s
+            if report.device_table is not None and report.ok():
+                self.device_tables[name] = report.device_table
+                tc.device_table = report.device_table
+                self._device_table_set = None      # rebuild lazily
+        return spent
+
+    @property
+    def device_table_set(self) -> Optional[DeviceTableSet]:
+        """The merged device upload over every certified grammar (None
+        until :meth:`build_device_tables` certifies at least one)."""
+        if self._device_table_set is None and self.device_tables:
+            self._device_table_set = DeviceTableSet(self.device_tables)
+        return self._device_table_set
 
     # -- request / checker factory -----------------------------------------------
 
@@ -520,7 +636,9 @@ class ServingEngine:
                     # sound grammars; report it rather than force EOS
                     return None, 0, mask_t
                 return tok, 1, mask_t          # raw argmax was illegal
-            mask = bitmask.unpack(bits, self._v)   # sampling wants bool
+            # temperature>0 host sampling is the one place bits may
+            # widen; greedy/verify paths above stay packed
+            mask = bitmask.unpack(bits, self._v)  # hotpath-lint: allow
         if not mask.any():
             return None, 0, mask_t
         tok = self._select(logits, mask, pol)
@@ -728,7 +846,9 @@ class ServingEngine:
                        queue_timeout_s: Optional[float] = None,
                        default_deadline_s: Optional[float] = None,
                        fault_injector=None,
-                       debug_invariants: bool = False
+                       debug_invariants: bool = False,
+                       device_loop: bool = False,
+                       sync_n: int = 8
                        ) -> List[GenerationResult]:
         """Serve ``requests`` (Requests or bare prompt strings) through
         the continuous-batching scheduler.  Rows may mix grammars,
@@ -753,6 +873,13 @@ class ServingEngine:
         ``debug_invariants`` audits every tick boundary.  Every request
         gets a result regardless — non-ok outcomes carry an explicit
         ``status`` / ``error``.
+
+        ``device_loop=True`` enables the device-resident fused decode
+        loop for rows whose grammar carries a clean device table (build
+        them first: ``ServingEngine(..., device_tables=True)`` +
+        :meth:`precompute`); ``sync_n`` is the number of decode steps
+        fused per host sync.  Rows without a certified table decode on
+        the host path, token-for-token identical to ``device_loop=False``.
         """
         from repro.serving.scheduler import ContinuousBatchingScheduler
         cap = min(len(requests), max_batch) if max_batch else len(requests)
@@ -768,7 +895,8 @@ class ServingEngine:
             queue_timeout_s=queue_timeout_s,
             default_deadline_s=default_deadline_s,
             fault_injector=fault_injector,
-            debug_invariants=debug_invariants, **kwargs)
+            debug_invariants=debug_invariants,
+            device_loop=device_loop, sync_n=sync_n, **kwargs)
         sessions = [sched.submit(r) for r in requests]
         sched.run()
         return [s.result for s in sessions]

@@ -106,6 +106,7 @@ from __future__ import annotations
 
 import collections
 import functools
+import math
 import time
 from typing import Callable, Dict, List, Optional, Union
 
@@ -114,7 +115,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bitmask
-from repro.kernels.masked_sample.ops import masked_argmax
+from repro.core.analysis import OFF_FRONTIER
+from repro.core.domino import DominoDecoder
+from repro.kernels.masked_sample.kernel import masked_argmax_pallas_packed
+from repro.kernels.masked_sample.ops import (masked_argmax,
+                                             masked_sample_packed)
 from repro.models import kvcache
 from repro.serving.faults import (FaultInjector, InjectedFault,
                                   InvariantViolation, check_invariants)
@@ -308,7 +313,8 @@ class ContinuousBatchingScheduler:
                  queue_timeout_s: Optional[float] = None,
                  default_deadline_s: Optional[float] = None,
                  fault_injector: Optional[FaultInjector] = None,
-                 debug_invariants: bool = False):
+                 debug_invariants: bool = False,
+                 device_loop: bool = False, sync_n: int = 8):
         self.eng = engine
         self.capacity = max(1, capacity)
         self.overlap = overlap
@@ -397,6 +403,65 @@ class ContinuousBatchingScheduler:
         #                                keyed memo on the shared TreeCache
         self.n_fwd = 0                 # global forward count (all slots)
         self.n_preempt = 0             # paged recompute preemptions
+        # device-resident decode loop (ISSUE 8): when enabled AND the
+        # engine uploaded device tables (ServingEngine(device_tables=True)
+        # + precompute()), ticks whose every resident row is certified
+        # (DOMINO k=inf on a cleanly-certified grammar, greedy,
+        # non-speculative) run sync_n decode steps in ONE fused device
+        # call — mask gather, packed argmax, transition-table state
+        # advance, KV append — and sync to the host once per block
+        # instead of once per token.  Any host-path row in the batch
+        # falls the whole tick back to the per-token path (those rows
+        # need a host advance per token anyway), where certified rows
+        # still gather their mask from the device table (stage 1).
+        # Trade-off knobs documented in README: admission, cancellation,
+        # deadline checks and EOS bookkeeping happen at block boundaries,
+        # so sync_n bounds how stale they can go (<= sync_n tokens).
+        self.device_loop = bool(device_loop)
+        self.sync_n = max(1, int(sync_n))
+        self._dts = engine.device_table_set if self.device_loop else None
+        # per-slot device-table state id; OFF_FRONTIER (<0) = host path.
+        # Maintained incrementally: computed from the checker at
+        # admission (one abstract_key), advanced by O(1) host transition
+        # lookups at every commit, resynced from the device after a
+        # fused block, cleared on finish/preempt.
+        self._dev_state = np.full(self.capacity, OFF_FRONTIER, np.int64)
+        # tokens since the row's table state was last AUDITED against the
+        # concrete checker's mask.  The key quotient is an abstraction of
+        # a context-free state space, so a table walk can drift off the
+        # concrete state (a QUOTIENT ESCAPE); every sync_n tokens — and
+        # at every fused-block boundary — the mask row is compared to the
+        # concrete mask and an escaped row demotes to the exact host
+        # path.  Divergence from the host path is thereby bounded to one
+        # audit interval; grammar validity is unconditional (every
+        # committed token is validated by a concrete checker advance).
+        self._dev_age = np.zeros(self.capacity, np.int64)
+        self.n_quotient_escapes = 0    # audit demotions
+        self.n_table_rejects = 0       # table-selected token rejected by
+        #                                the checker -> recompute-preempt
+        # per-tick device-gather plan: slot -> global state id (>=0) for
+        # rows whose mask is gathered from the device table this tick
+        self._dev_gather = np.full(self.capacity, OFF_FRONTIER, np.int64)
+        # decode_nan fault plan for one fused block, consulted host-side
+        # up front (persistent: tick funcs must not allocate dense rows)
+        self._nan_plan = np.zeros((self.capacity, self.sync_n), bool)
+        # device-sampler staging: per-row temperature + per-row
+        # counter-based PRNG key (fold_in(PRNGKey(seed), n_draws)),
+        # persistent so the tick path never allocates a dense buffer
+        self._samp_temps = np.zeros(self.capacity, np.float32)
+        self._samp_keys = np.zeros((self.capacity, 2), np.uint32)
+        self._fused_fn = None          # built lazily on first device tick
+        # mask-table gather: device rows take their table row, host rows
+        # keep the staged packed buffer
+        self._gather_masks = jax.jit(lambda tab, sid, staged: jnp.where(
+            (sid >= 0)[:, None], tab[jnp.maximum(sid, 0).astype(jnp.int32)],
+            staged))
+        # decode-path host sync points (one blocking readback that gates
+        # token commitment): +1 per host-path selection tick, +1 per
+        # fused device block.  The benchmark reports syncs per committed
+        # token — the quantity this PR drives from ~1 down to ~1/sync_n.
+        self.n_host_syncs = 0
+        self.n_device_tokens = 0       # tokens committed by fused blocks
         self._next_rid = 0
         # lifecycle bookkeeping: every terminal session in submit order
         # (`run()` reports from here, so submit-time rejections are never
@@ -469,6 +534,8 @@ class ContinuousBatchingScheduler:
             width = self._verify_width()
             if width > 1:
                 self._spec_step(width)
+            elif self._device_ready():
+                self._device_step()
             else:
                 self._plain_step()
         self._reset_vacant_lens()
@@ -628,6 +695,11 @@ class ContinuousBatchingScheduler:
             sess.slot = slot
             sess.t_admit = time.perf_counter()
             self.slots[slot] = sess
+            # device-table tracking starts (or resumes, after preemption:
+            # the checker already advanced past the generated prefix) at
+            # the checker's CURRENT abstract state
+            self._dev_state[slot] = self._sid_for(sess)
+            self._dev_age[slot] = 0
             if self._inject("prefill_nan", sess):
                 self._logits = self._logits.at[slot].set(jnp.nan)
 
@@ -657,6 +729,7 @@ class ContinuousBatchingScheduler:
         sess.finish(self.eng.tok.decode)
         if sess.slot >= 0:
             self._premask.pop(sess.slot, None)
+            self._dev_state[sess.slot] = OFF_FRONTIER
             if self.paged:
                 self._free_slot_pages(sess.slot)
             self.slots[sess.slot] = None
@@ -711,6 +784,7 @@ class ContinuousBatchingScheduler:
         and outputs are unchanged."""
         slot = sess.slot
         self._premask.pop(slot, None)
+        self._dev_state[slot] = OFF_FRONTIER
         self._free_slot_pages(slot)
         self.slots[slot] = None
         sess.slot = -1
@@ -820,6 +894,8 @@ class ContinuousBatchingScheduler:
             if sess is None or sess.checker is None \
                     or slot in self._premask:
                 continue
+            if self.device_loop and self._dev_state[slot] >= 0:
+                continue   # mask comes from the uploaded device table
             if self.adaptive_prebuild and sess.opportunistic \
                     and sess.temperature <= 0.0 \
                     and not self._opp_intervened[slot]:
@@ -850,7 +926,9 @@ class ContinuousBatchingScheduler:
         raw_dev, fin_dev = self._raw_stats(self._logits)
         raw = np.asarray(raw_dev)
         finite = np.asarray(fin_dev)
+        self.n_host_syncs += 1         # per-token selection sync point
         masks = self._mask_words              # persistent staging buffer
+        self._dev_gather[:] = OFF_FRONTIER
         row_bits: Dict[int, Optional[np.ndarray]] = {}
         for slot, sess in enumerate(self.slots):
             if sess is None:
@@ -862,6 +940,16 @@ class ContinuousBatchingScheduler:
                 # explicit status while batch-mates keep decoding
                 self._fail(sess, "non-finite logits from device step")
                 masks[slot] = self._sentinel_row
+                continue
+            if self.device_loop and self._dev_state[slot] >= 0:
+                # certified row (stage-1 device gather): its mask IS the
+                # device table row — gathered device-side for selection,
+                # host mirror staged for sampled rows.  No checker walk,
+                # no opportunistic probe, no dead-end check (a clean
+                # certificate has no trap states), ~zero mask_time.
+                sid = int(self._dev_state[slot])
+                self._dev_gather[slot] = sid
+                row_bits[slot] = self._dts.mask_host[sid]
                 continue
             ch = sess.checker
             if ch is None:
@@ -905,12 +993,38 @@ class ContinuousBatchingScheduler:
         if not occupied:
             return {}
         toks = np.zeros(self.capacity, np.int64)
+        # certified rows' mask rows are gathered ON DEVICE from the
+        # uploaded table (the staged host buffer keeps everyone else);
+        # without device tables this is exactly the staged buffer
+        m_stage = jnp.asarray(masks)
+        if self.device_loop and bool((self._dev_gather >= 0).any()):
+            m_stage = self._gather_masks(
+                self._dts.mask_dev, jnp.asarray(self._dev_gather), m_stage)
         greedy = [s for s in occupied if self.slots[s].temperature <= 0.0]
         if greedy:
-            idx, _ = masked_argmax(self._logits[:, :v], jnp.asarray(masks))
+            idx, _ = masked_argmax(self._logits[:, :v], m_stage)
             toks[greedy] = np.asarray(idx)[greedy]
         sampled = [s for s in occupied if s not in greedy]
-        if sampled:
+        if sampled and self.device_loop:
+            # device sampler (Gumbel-max over the packed legal set):
+            # per-row temperature, per-row counter-based keys — the
+            # stream is a pure function of (seed, draw index), so output
+            # never depends on batch composition.  NOT bit-identical to
+            # the host np.random path below; distributionally identical.
+            self._samp_temps[:] = 0.0
+            for slot in sampled:
+                sess = self.slots[slot]
+                self._samp_temps[slot] = sess.temperature
+                self._samp_keys[slot] = np.asarray(
+                    jax.random.fold_in(jax.random.PRNGKey(sess.decode.seed),
+                                       sess.n_draws))
+                sess.n_draws += 1
+            sel = np.asarray(masked_sample_packed(
+                self._logits[:, :v], m_stage,
+                jnp.asarray(self._samp_temps), jnp.asarray(self._samp_keys)))
+            for slot in sampled:
+                toks[slot] = sel[slot]
+        elif sampled:
             lg_host = np.asarray(self._logits)[:, :v]
             for slot in sampled:
                 sess = self.slots[slot]
@@ -942,10 +1056,23 @@ class ContinuousBatchingScheduler:
             if sess is None or sess.slot != slot:
                 continue     # evicted between selection and commit
             ch = sess.checker
+            # tracked rows select from the TABLE's mask row; a quotient
+            # escape can therefore offer a token the concrete checker
+            # refuses.  advance() leaves state unchanged on False, so the
+            # validated prefix is intact: recompute-preempt the row — it
+            # re-enters through _sid_for's exact entry audit and resumes
+            # on the host path if still escaped.  Untracked rows selected
+            # from the checker's own mask; their advance return keeps the
+            # pre-device-loop (ignore) semantics.
+            tracked = self._dev_state[slot] >= 0
             try:
                 if tok == sess.eos_id:
                     if ch is not None:
-                        ch.advance(tok)
+                        ok = ch.advance(tok)
+                        if tracked and not ok:
+                            self.n_table_rejects += 1
+                            self._preempt(sess)
+                            continue
                     sess.finished_eos = True
                     self._finish(sess)
                     continue
@@ -956,8 +1083,14 @@ class ContinuousBatchingScheduler:
                     if self._inject("advance_error", sess):
                         raise InjectedFault(
                             f"injected advance failure (rid={sess.rid})")
-                    ch.advance(tok)
+                    ok = ch.advance(tok)
                     self._premask.pop(slot, None)  # state moved: stale
+                    if tracked:
+                        if not ok:
+                            self.n_table_rejects += 1
+                            self._preempt(sess)
+                            continue
+                        self._advance_sid(slot, sess, tok)
             except Exception as e:   # quarantined: evict THIS row only
                 self._fail(sess, f"checker failed during advance: {e!r}")
                 continue
@@ -1018,6 +1151,308 @@ class ContinuousBatchingScheduler:
                               overlap_fn=self._prebuild_masks)
         self._logits = lg[:, -1].astype(jnp.float32)
         self._inject_nan_rows("decode_nan")
+
+    # -- device-resident fused decode loop (tentpole) ---------------------------
+
+    def _sid_for(self, sess: Session) -> int:
+        """Global device-table state id for this session's CURRENT
+        checker state, or OFF_FRONTIER when the row cannot be tracked:
+        no uploaded tables, no constraint spec, a checker whose concrete
+        type is not exactly DominoDecoder (healed / online / naive
+        subclasses and stubs own semantics the table was not built
+        from), bounded lookahead, a custom EOS id, an unregistered or
+        uncertified grammar, or an abstract state outside the certified
+        frontier."""
+        dts = self._dts
+        if dts is None or sess.checker is None or sess.request is None:
+            return OFF_FRONTIER
+        ch = sess.checker
+        if type(ch) is not DominoDecoder or not ch.device_trackable:
+            return OFF_FRONTIER
+        spec = sess.request.constraint
+        gname = getattr(spec, "grammar", None)
+        if not isinstance(gname, str) or gname not in dts.offsets:
+            return OFF_FRONTIER
+        if sess.eos_id != dts.tables[gname].eos_id:
+            return OFF_FRONTIER    # table EOS edges assume the engine EOS
+        sid = dts.sid_for(gname, ch)
+        if sid < 0:
+            return OFF_FRONTIER
+        # ENTRY AUDIT.  The abstract-key quotient of a context-free
+        # grammar is not a bisimulation: two concrete states can share a
+        # key yet disagree on their mask (a quotient escape — see
+        # analysis.build_device_table).  Admission is the cheap place to
+        # catch it: a fresh checker's mask_bits() hits the shared memo,
+        # so this is a dict lookup + array compare, not a mask build.
+        t0 = time.perf_counter()
+        bits = ch.mask_bits()
+        sess.mask_time += time.perf_counter() - t0
+        if not np.array_equal(dts.mask_host[sid], bits):
+            self.n_quotient_escapes += 1
+            return OFF_FRONTIER
+        return sid
+
+    def _advance_sid(self, slot: int, sess: Session, tok: int) -> None:
+        """Mirror a checker advance through the host transition table —
+        O(1) incremental device-state tracking — auditing the landing
+        state's mask row against the concrete checker every ``sync_n``
+        advances so a quotient escape can't drift unbounded."""
+        sid = int(self._dts.trans_host[self._dev_state[slot], tok])
+        if sid < 0:
+            self._dev_state[slot] = OFF_FRONTIER
+            return
+        self._dev_age[slot] += 1
+        if self._dev_age[slot] < self.sync_n:
+            self._dev_state[slot] = sid
+            return
+        self._dev_state[slot] = self._audit_sid(slot, sess, sid)
+
+    def _audit_sid(self, slot: int, sess: Session, sid: int) -> int:
+        """Compare the table's mask row against the concrete checker's
+        packed mask.  Equal -> the table keeps selecting for this row;
+        different -> a quotient escape: demote the row to the exact host
+        path (the audit's mask build is kept as its premask, not
+        wasted).  Bounds table/checker divergence to one audit
+        interval at a cost of 1/sync_n mask builds per token."""
+        t0 = time.perf_counter()
+        bits = sess.checker.mask_bits()
+        sess.mask_time += time.perf_counter() - t0
+        self._dev_age[slot] = 0
+        if np.array_equal(self._dts.mask_host[sid], bits):
+            return sid
+        self.n_quotient_escapes += 1
+        self._premask[slot] = bits
+        return OFF_FRONTIER
+
+    def _device_ready(self) -> bool:
+        """True when EVERY resident row can commit tokens without a host
+        round-trip: greedy, non-speculative, constrained by a checker
+        whose state sits inside an uploaded device table, with room for a
+        full block.  All-or-nothing on purpose: one host-path row needs a
+        host sync per token anyway, so fusing its batch-mates buys
+        nothing and would split the batched forward — mixed ticks take
+        the per-token path, where certified rows still gather their
+        masks from the device table."""
+        if not self.device_loop or self._dts is None or self.sync_n < 2 \
+                or self.eng._needs_refeed:
+            return False
+        ready = False
+        for slot, sess in enumerate(self.slots):
+            if sess is None:
+                continue
+            if sess.checker is None or sess.speculator is not None \
+                    or sess.temperature > 0.0 \
+                    or self._dev_state[slot] < 0:
+                return False
+            ready = True
+        if not ready:
+            return False
+        # a fused block writes up to sync_n new cache positions per row;
+        # near max_len fall back to the per-token path (which stops at
+        # the exact boundary) rather than write past the cache
+        lens = np.asarray(self.cache["len"])
+        return int(lens.max()) + self.sync_n <= self.eng.max_len
+
+    def _build_fused(self):
+        """Trace the fused N-step decode loop: forward, packed-mask
+        argmax, transition-table state advance and KV append run entirely
+        on device inside ``lax.while_loop``; the host syncs once per
+        block.  Per-row early exit: EOS selection, budget exhaustion,
+        off-frontier transition, or a non-finite logits row (fault) drop
+        the row from ``active``; the loop ends when no row is active.
+
+        Faithfulness to the per-token path (bitwise, for greedy rows):
+        selection is the same ``masked_argmax_pallas_packed`` over the
+        same table mask row; injected NaNs poison logits AFTER the
+        forward, so detection happens at the NEXT selection's finiteness
+        check exactly like the host path; the whole-block length rewind
+        (``len = snap_len + n_fed``) is the speculative-rollback idiom —
+        every iteration advances every row's ragged ``len`` by one, only
+        the fed tokens are real, KV beyond ``len`` is masked by validity.
+        """
+        eng = self.eng
+        n = self.sync_n
+        v = eng._v
+        pad_id = eng.tok.pad_id
+        decode = eng.model.decode_step
+        interpret = jax.default_backend() != "tpu"
+        cap = self.capacity
+
+        def fused(params, cache, lg, state, active, rem, eos_ids,
+                  nan_plan, mask_tab, trans_tab):
+            snap_len = cache["len"]
+            toks0 = jnp.full((cap, n), -1, jnp.int32)
+            raws0 = jnp.full((cap, n), -1, jnp.int32)
+
+            def cond(c):
+                return (c[0] < n) & jnp.any(c[5])
+
+            def body(c):
+                (i, cache, lg, out_lg, state, active, rem, toks, raws,
+                 n_fed, fault) = c
+                finite = jnp.all(jnp.isfinite(lg[:, :v]), axis=-1)
+                fault = fault | (active & ~finite)
+                commit = active & finite
+                masks = mask_tab[jnp.maximum(state, 0)]
+                sel, _ = masked_argmax_pallas_packed(
+                    lg[:, :v], masks, interpret=interpret)
+                sel = sel.astype(jnp.int32)
+                raw = jnp.argmax(lg[:, :v], axis=-1).astype(jnp.int32)
+                eos_hit = commit & (sel == eos_ids)
+                adv = commit & ~eos_hit
+                rem = jnp.where(adv, rem - 1, rem)
+                fed = adv & (rem > 0)
+                nxt = trans_tab[jnp.maximum(state, 0),
+                                jnp.maximum(sel, 0)]
+                state = jnp.where(adv, nxt, state)
+                toks = toks.at[:, i].set(jnp.where(commit, sel, -1))
+                raws = raws.at[:, i].set(jnp.where(commit, raw, -1))
+                feed = jnp.where(fed, sel, pad_id)[:, None]
+                new_lg, cache = decode(params, cache, feed)
+                new_lg = new_lg[:, -1, :].astype(jnp.float32)
+                new_lg = jnp.where(nan_plan[:, i][:, None], jnp.nan,
+                                   new_lg)
+                out_lg = jnp.where(fed[:, None], new_lg, out_lg)
+                n_fed = n_fed + fed.astype(jnp.int32)
+                active = fed & (nxt >= 0)
+                return (i + 1, cache, new_lg, out_lg, state, active, rem,
+                        toks, raws, n_fed, fault)
+
+            carry = (jnp.int32(0), cache, lg, lg, state, active, rem,
+                     toks0, raws0, jnp.zeros((cap,), jnp.int32),
+                     jnp.zeros((cap,), bool))
+            (steps, cache, _lg, out_lg, state, _active, _rem, toks, raws,
+             n_fed, fault) = jax.lax.while_loop(cond, body, carry)
+            cache = dict(cache)
+            cache["len"] = snap_len + n_fed
+            return cache, out_lg, state, toks, raws, n_fed, fault, steps
+
+        return jax.jit(fused, donate_argnums=(1,))
+
+    def _device_step(self) -> None:
+        """One fused tick: run up to ``sync_n`` decode steps in a single
+        device call, then ONE host readback, then replay every committed
+        token through the concrete checkers (``_resync_row``) so host
+        state, statuses and results are exactly what the per-token path
+        would have produced for the same tokens."""
+        eng = self.eng
+        # reserve the whole block's cache growth up front (may preempt —
+        # preempted rows clear their _dev_state, survivors stay eligible)
+        self._ensure_pages(self.sync_n)
+        if not any(s is not None for s in self.slots):
+            return
+        self._sync_pages()
+        active0 = np.asarray([s is not None for s in self.slots], bool)
+        rem0 = np.asarray([0 if s is None else s.budget
+                           for s in self.slots], np.int32)
+        eos0 = np.asarray([-1 if s is None else s.eos_id
+                           for s in self.slots], np.int32)
+        state0 = np.where(active0, self._dev_state,
+                          OFF_FRONTIER).astype(np.int32)
+        # consult the decode_nan fault plan for the whole block up front
+        # (same per-row consultation order as sync_n host ticks)
+        self._nan_plan[:] = False
+        if self.injector is not None:
+            for j in range(self.sync_n):
+                for slot, sess in enumerate(self.slots):
+                    if sess is not None:
+                        self._nan_plan[slot, j] = self._inject(
+                            "decode_nan", sess)
+        if self._fused_fn is None:
+            self._fused_fn = self._build_fused()
+        t0 = time.perf_counter()
+        (self.cache, out_lg, state_dev, toks_dev, raws_dev, n_fed_dev,
+         fault_dev, steps_dev) = self._fused_fn(
+            eng.params, self.cache, self._logits,
+            jnp.asarray(state0), jnp.asarray(active0), jnp.asarray(rem0),
+            jnp.asarray(eos0), jnp.asarray(self._nan_plan),
+            self._dts.mask_dev, self._dts.trans_dev)
+        out_lg.block_until_ready()
+        dt = time.perf_counter() - t0
+        self._logits = out_lg
+        # the block's ONE host sync: tokens, states, counts, faults and
+        # step count all come back in a single readback
+        self.n_host_syncs += 1
+        toks = np.asarray(toks_dev)
+        raws = np.asarray(raws_dev)
+        state_out = np.asarray(state_dev)
+        n_fed = np.asarray(n_fed_dev)
+        fault = np.asarray(fault_dev)
+        steps_run = int(steps_dev)
+        self.n_fwd += steps_run
+        for slot, sess in enumerate(list(self.slots)):
+            if sess is None:
+                continue
+            sess.n_fwd += int(n_fed[slot])
+            sess.model_time += dt
+            self._resync_row(slot, sess, toks[slot], raws[slot],
+                             bool(fault[slot]), int(state_out[slot]),
+                             steps_run)
+        self._shrink_pages()   # rows that exited early rewound their len
+
+    def _resync_row(self, slot: int, sess: Session, toks_row, raws_row,
+                    faulted: bool, state_out: int,
+                    steps_run: int) -> None:
+        """Replay one row's device-committed token block through its
+        CONCRETE checker, mirroring ``_commit_first`` token for token —
+        grammar state, out_ids, budget, EOS/status taxonomy and
+        intervention counts end up exactly as the per-token path would
+        have left them.  A checker exception (injected or real)
+        quarantines THIS row; a checker REJECTION (quotient escape)
+        recompute-preempts it with the validated prefix intact; a device
+        fault flag surfaces as the same ``internal_error`` the host
+        finiteness check raises."""
+        ch = sess.checker
+        for j in range(steps_run):
+            tok = int(toks_row[j])
+            if tok < 0:
+                break                  # row went inactive at step j
+            sess.n_int += int(tok != int(raws_row[j]))
+            try:
+                if tok == sess.eos_id:
+                    if ch.advance(tok):
+                        sess.finished_eos = True
+                        self._finish(sess)
+                    else:
+                        # quotient escape: table offered EOS where the
+                        # checker forbids it.  State is unchanged, the
+                        # validated prefix intact: recompute-preempt;
+                        # _sid_for's entry audit demotes the row to the
+                        # host path on re-admission if still escaped.
+                        self.n_table_rejects += 1
+                        self._preempt(sess)
+                    return
+                if self._inject("advance_error", sess):
+                    raise InjectedFault(
+                        f"injected advance failure (rid={sess.rid})")
+                ok = ch.advance(tok)
+            except Exception as e:   # quarantined: evict THIS row only
+                self._fail(sess, f"checker failed during advance: {e!r}")
+                return
+            self._premask.pop(slot, None)   # state moved: mask stale
+            if not ok:
+                # quotient escape surfaced as a concrete rejection (same
+                # recovery as the EOS case above) — never silent
+                # corruption, never a lost request
+                self.n_table_rejects += 1
+                self._preempt(sess)
+                return
+            sess.out_ids.append(tok)
+            sess.budget -= 1
+            sess.n_device_tokens += 1
+            self.n_device_tokens += 1
+            if sess.budget <= 0:
+                self._finish(sess)
+                return
+        if faulted:
+            self._fail(sess, "non-finite logits from device step")
+            return
+        if state_out < 0:
+            self._dev_state[slot] = OFF_FRONTIER
+            return
+        # block boundary = audit point: the fused loop ran up to sync_n
+        # table transitions with no concrete checker in the loop
+        self._dev_state[slot] = self._audit_sid(slot, sess, int(state_out))
 
     # -- speculative decode tick (§3.6) -----------------------------------------
 
@@ -1155,6 +1590,10 @@ class ContinuousBatchingScheduler:
                     f"injected advance failure (rid={sess.rid})")
             ch.advance(tok_i)
             self._premask.pop(slot, None)   # state moved: mask stale
+            if self._dev_state[slot] >= 0:
+                # tok_i was checker-validated above; only the table state
+                # needs mirroring (with its periodic escape audit)
+                self._advance_sid(slot, sess, tok_i)
             accepted += 1
             if tok_i == sess.eos_id:
                 sess.finished_eos = True

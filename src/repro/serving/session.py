@@ -46,6 +46,9 @@ class GenerationResult:
     # scheduler (pages reclaimed under pool pressure, prompt + generated
     # prefix re-prefilled on re-admission)
     n_preemptions: int = 0
+    # tokens committed through the device-resident fused decode loop
+    # (certified-grammar rows under device_loop=True; 0 on the host path)
+    n_device_tokens: int = 0
     # the checker reached a state with NO legal token (including EOS).
     # Output up to this point is a valid *prefix* but cannot be completed;
     # forcing EOS here would silently emit grammar-violating output.
@@ -121,6 +124,16 @@ class Session:
     n_prop: int = 0
     n_acc: int = 0
     n_preempt: int = 0                # paged-KV recompute preemptions
+    # sampling-draw counter: number of temperature>0 selections this
+    # request has made.  The device sampling kernel folds it into the
+    # request's counter-based PRNG key, so a sampled row's stream depends
+    # only on (seed, draw index) — never on batch composition — matching
+    # the host np.random.Generator contract in spirit (same independence
+    # guarantee, different bit stream).
+    n_draws: int = 0
+    # tokens this request committed through the device-resident fused
+    # decode loop (0 for host-path rows)
+    n_device_tokens: int = 0
     mask_time: float = 0.0            # this request's checker time only
     mask_overlap: float = 0.0         # ... of which hidden under device
     model_time: float = 0.0
@@ -180,6 +193,7 @@ class Session:
             mask_overlap_s=self.mask_overlap,
             mask_cache_hits=getattr(self.checker, "n_mask_memo_hits", 0),
             n_preemptions=self.n_preempt,
+            n_device_tokens=self.n_device_tokens,
             model_time_s=self.model_time,
             wall_time_s=self.t_finish - self.t_submit,
             finished=self.finished_eos,

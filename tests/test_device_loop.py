@@ -1,0 +1,281 @@
+"""Device-resident fused decode loop (ISSUE 8).
+
+Acceptance: (1) a cleanly-certified grammar's ``DeviceGrammarTable``
+reproduces the concrete checker's masks and transitions state-for-state;
+(2) an all-certified greedy batch decodes through the fused loop —
+``n_device_tokens > 0``, host syncs per token well under 1 — with output
+token-for-token identical to the host path AND to single-request
+``generate``; (3) a mixed batch (certified JSON + online-checked + healed
+rows) under ``device_loop=True`` is bitwise-identical to the all-host
+scheduler; (4) a grammar whose certificate is downgraded (mask conflict)
+provably never enters the device path; (5) an injected NaN mid-fused-block
+quarantines exactly the planned row with the same ``internal_error`` the
+host path raises, while batch-mates finish ``ok``; (6) the device sampler
+matches host ``select_token`` in distribution; (7) the speculative verify
+path never widens packed masks to bool (runtime check backing the
+hot-path linter).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import bitmask
+from repro.core.analysis import OFF_FRONTIER, analyze
+from repro.core.domino import DominoDecoder
+from repro.core.sampling import GrammarSampler
+from repro.kernels.masked_sample.ops import masked_sample_packed
+from repro.models import build_model
+from repro.serving import (ConstraintSpec, ContinuousBatchingScheduler,
+                           DecodeParams, EngineConfig, Request,
+                           ServingEngine)
+from repro.serving.faults import FaultInjector
+from repro.serving.request import select_token
+from repro.tokenizer import train_bpe
+
+BASE = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+            dtype="float32", max_seq_len=512)
+
+PROMPTS = ["a: ", "some much longer json prompt here: ", "x",
+           "record -> "]
+
+
+@pytest.fixture(scope="module")
+def setup(json_grammar):
+    """Byte-level tokenizer: the JSON zoo grammar certifies CLEAN against
+    a byte-complete vocabulary (344 abstract states, zero conflicts), so
+    the engine can build a device table for it."""
+    corpus = GrammarSampler(json_grammar, seed=7).corpus(80)
+    tok = train_bpe(corpus, vocab_size=257)
+    cfg = ModelConfig(arch_id="dev-attn", family="dense",
+                      vocab_size=tok.vocab_size, **BASE)
+    m = build_model(cfg)
+    return m, m.init(jax.random.PRNGKey(0)), tok
+
+
+@pytest.fixture(scope="module")
+def engine(setup, json_grammar):
+    m, params, tok = setup
+    eng = ServingEngine(m, params, tok, json_grammar,
+                        EngineConfig(mode="domino", max_tokens=16),
+                        max_len=256, device_tables=True)
+    eng.register_grammar("json", json_grammar)
+    stats = eng.precompute()
+    assert stats.get("device_table_seconds", 0) > 0
+    assert "json" in eng.device_tables
+    return eng
+
+
+def test_device_table_walk_and_quotient_escape_audit(setup, json_grammar,
+                                                     engine):
+    """Walk a nested-JSON token sequence through a concrete DominoDecoder
+    and the table side by side.  JSON is context-free, so the finite
+    abstract-key quotient CANNOT be a bisimulation: a deep walk is
+    expected to eventually escape the quotient.  The contract under test
+    is the one the scheduler enforces: (1) the table is faithful (mask
+    rows equal, transitions on-frontier) for a long prefix; (2) the
+    FIRST unfaithful step is detected by exactly the audit predicate the
+    scheduler applies — mask-row equality; (3) past the escape, a token
+    the stale table row admits but the checker rejects is caught by
+    ``advance`` returning False with state unchanged (grammar validity
+    stays unconditional)."""
+    _m, _params, tok = setup
+    table = engine.device_tables["json"]
+    assert table.n_bytes == table.mask_table.nbytes + table.trans.nbytes
+    v = len(tok.vocab)
+    d = DominoDecoder(json_grammar, list(tok.vocab), tok.eos_id)
+    sid = table.sid_for(d)
+    assert sid >= 0
+    # entry audit (what _sid_for runs at admission) passes at the root
+    assert np.array_equal(table.mask_table[sid], d.mask_bits())
+    text = b'{"key": [1, 2.5, "str", {"nested": true}], "other": null}'
+    ids = tok.encode_bytes(text)
+    faithful = 0
+    escape_sid = None
+    for tok_id in ids:
+        if not np.array_equal(table.mask_table[sid], d.mask_bits()):
+            escape_sid = sid           # audit predicate fires HERE
+            break
+        if not bitmask.get_bit(d.mask_bits(), tok_id):
+            break                      # text ended mid-token
+        nxt = int(table.trans[sid, tok_id])
+        assert nxt >= 0, "mask-legal token transitioned off-frontier"
+        assert d.advance(tok_id)
+        sid = nxt
+        faithful += 1
+    assert faithful >= 20, \
+        f"table diverged from the checker after only {faithful} steps"
+    if escape_sid is not None:
+        # safety net past the escape: any token the stale row admits
+        # but the concrete checker forbids must be REJECTED by advance
+        # (state unchanged) — the scheduler turns that into a
+        # recompute-preemption, never a corrupt output
+        tbl_legal = bitmask.unpack(table.mask_table[escape_sid], v)
+        ch_legal = bitmask.unpack(d.mask_bits(), v)
+        before = d.mask_bits().copy()
+        for t in np.nonzero(tbl_legal & ~ch_legal)[0][:4]:
+            assert not d.advance(int(t))
+            assert np.array_equal(d.mask_bits(), before)
+
+
+def test_all_certified_batch_runs_fused(engine):
+    """Every row certified + greedy => the fused loop commits (nearly)
+    every token; outputs identical to the host scheduler AND to
+    single-request generate; host syncs per token ~1/sync_n, not ~1."""
+    eng = engine
+    singles = [eng.generate(p) for p in PROMPTS]
+    host = ContinuousBatchingScheduler(eng, capacity=2,
+                                       debug_invariants=True)
+    for p in PROMPTS:
+        host.submit(p)
+    host_res = host.run()
+    dev = ContinuousBatchingScheduler(eng, capacity=2, device_loop=True,
+                                      sync_n=8, debug_invariants=True)
+    for p in PROMPTS:
+        dev.submit(p)
+    dev_res = dev.run()
+    for s, h, d in zip(singles, host_res, dev_res):
+        assert d.token_ids == h.token_ids == s.token_ids
+        assert d.status == h.status
+        assert d.finished == h.finished
+    n_tok = sum(r.n_tokens for r in dev_res)
+    assert dev.n_device_tokens == n_tok > 0
+    assert all(r.n_device_tokens == r.n_tokens for r in dev_res)
+    # the whole point: way fewer than one host sync per committed token
+    assert dev.n_host_syncs < host.n_host_syncs
+    assert dev.n_host_syncs / n_tok <= 1 / 8 + 0.1
+    # host path never consulted the fused loop; it syncs once per TICK
+    # (capacity rows each), so at least once per token of the longest row
+    assert host.n_device_tokens == 0
+    assert host.n_host_syncs >= max(r.n_tokens for r in host_res)
+
+
+def test_mixed_batch_identical_to_all_host(engine):
+    """Certified JSON + online-checked + token-healed rows in ONE batch:
+    device_loop=True must be token-for-token identical to the all-host
+    scheduler (healed/online rows are never device-eligible; their
+    presence forces mixed ticks onto the per-token path where certified
+    rows still gather table masks — stage 1)."""
+    eng = engine
+    reqs = [
+        Request("a json: ", ConstraintSpec(grammar="json", mode="domino"),
+                DecodeParams(max_tokens=10)),
+        Request("a json: ", ConstraintSpec(grammar="json", mode="online"),
+                DecodeParams(max_tokens=8)),
+        Request('{"k": 1', ConstraintSpec(grammar="json", mode="domino",
+                                          heal=1),
+                DecodeParams(max_tokens=8)),
+        Request("free text: ", ConstraintSpec(),
+                DecodeParams(max_tokens=6)),
+    ]
+    host = eng.generate_batch(list(reqs), max_batch=3, device_loop=False)
+    dev = eng.generate_batch(list(reqs), max_batch=3, device_loop=True)
+    for h, d in zip(host, dev):
+        assert d.token_ids == h.token_ids
+        assert d.status == h.status
+        assert d.n_interventions == h.n_interventions
+
+
+def test_downgraded_certificate_never_enters_device(setup, json_grammar):
+    """A grammar whose analysis report carries a mask conflict must not
+    get a device table — and a device_loop run over it must commit zero
+    device tokens while producing the host path's exact output."""
+    m, params, tok = setup
+    eng = ServingEngine(m, params, tok, json_grammar,
+                        EngineConfig(mode="domino", max_tokens=10),
+                        max_len=256, device_tables=True)
+    name = "default"               # ctor grammar registers under this
+    rep = analyze(json_grammar, list(tok.vocab), tok.eos_id, name=name)
+    eng.analysis_reports[name] = dataclasses.replace(
+        rep, n_mask_conflicts=1)
+    eng.precompute()
+    assert name not in eng.device_tables
+    assert eng.device_table_set is None
+    sched = ContinuousBatchingScheduler(eng, capacity=2, device_loop=True,
+                                        sync_n=8, debug_invariants=True)
+    for p in PROMPTS[:2]:
+        sched.submit(p)
+    res = sched.run()
+    assert sched.n_device_tokens == 0
+    assert all(int(s) == OFF_FRONTIER for s in sched._dev_state)
+    host = [eng.generate(p) for p in PROMPTS[:2]]
+    for h, d in zip(host, res):
+        assert d.token_ids == h.token_ids
+
+
+def test_nan_fault_mid_fused_block_quarantines_one_row(engine):
+    """decode_nan targeted at one rid fires INSIDE a fused block: on
+    resync that row alone terminates internal_error with the host path's
+    exact error string; batch-mates keep decoding and finish ok."""
+    eng = engine
+    inj = FaultInjector(seed=0, rates={"decode_nan": 1.0}, targets={1})
+    sched = ContinuousBatchingScheduler(eng, capacity=2, device_loop=True,
+                                        sync_n=8, fault_injector=inj,
+                                        debug_invariants=True)
+    sessions = [sched.submit(p) for p in PROMPTS[:2]]
+    results = sched.run()
+    doomed = sessions[1].result
+    assert doomed.status == "internal_error"
+    assert "non-finite logits from device step" in doomed.error
+    survivor = sessions[0].result
+    assert survivor.status == "ok"
+    assert survivor.token_ids == eng.generate(PROMPTS[0]).token_ids
+
+
+def test_device_sampler_matches_host_distribution():
+    """Gumbel-max over the packed legal set == softmax(logits/T)
+    restricted to the mask: compare empirical frequencies against the
+    host select_token path (statistical, NOT bitwise — different PRNG
+    streams by design)."""
+    rng = np.random.default_rng(0)
+    v = 70
+    logits = rng.normal(size=v).astype(np.float32) * 2.0
+    legal = np.zeros(v, bool)
+    legal[rng.choice(v, size=9, replace=False)] = True
+    bits = bitmask.pack_bool(legal)
+    temp = 0.8
+    n = 4000
+    keys = np.stack([np.asarray(jax.random.fold_in(jax.random.PRNGKey(5), i))
+                     for i in range(n)]).astype(np.uint32)
+    dev = np.asarray(masked_sample_packed(
+        jax.numpy.asarray(np.tile(logits, (n, 1))),
+        jax.numpy.asarray(np.tile(bits, (n, 1))),
+        jax.numpy.full((n,), temp, np.float32),
+        jax.numpy.asarray(keys)))
+    assert legal[dev].all(), "device sampler drew an illegal token"
+    host_rng = np.random.default_rng(5)
+    host = np.asarray([select_token(logits, legal, temp, host_rng)
+                       for _ in range(n)])
+    dev_freq = np.bincount(dev, minlength=v)[legal] / n
+    host_freq = np.bincount(host, minlength=v)[legal] / n
+    tv = 0.5 * np.abs(dev_freq - host_freq).sum()
+    assert tv < 0.06, f"TV distance {tv:.3f} between device/host samplers"
+    # t <= 0 degenerates to the masked argmax
+    greedy = np.asarray(masked_sample_packed(
+        jax.numpy.asarray(logits[None]), jax.numpy.asarray(bits[None]),
+        jax.numpy.zeros((1,), np.float32), jax.numpy.asarray(keys[:1])))
+    masked = np.where(legal, logits, -np.inf)
+    assert int(greedy[0]) == int(masked.argmax())
+
+
+def test_verify_row_stays_packed(engine, monkeypatch):
+    """Speculative greedy verification must never unpack a mask to bool:
+    poison bitmask.unpack and run a speculative batch end to end (the
+    runtime counterpart of the hot-path linter's R2 check)."""
+    eng = engine
+    import repro.serving.engine as engine_mod
+    import repro.serving.scheduler as sched_mod
+
+    def _boom(*a, **k):
+        raise AssertionError("bitmask.unpack called on the greedy "
+                             "verify path")
+
+    monkeypatch.setattr(engine_mod.bitmask, "unpack", _boom)
+    assert sched_mod.bitmask.unpack is _boom      # same module object
+    req = Request("a: ", ConstraintSpec(grammar="json", mode="domino"),
+                  DecodeParams(max_tokens=10, speculative=True, spec_s=3,
+                               spec_threshold=0.0))
+    res = eng.generate_batch([req], device_loop=True)
+    assert res[0].status in ("ok", "dead_end")

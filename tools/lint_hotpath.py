@@ -54,6 +54,12 @@ TICK_FUNCS: Set[str] = {
     "_prebuild_masks", "_choose", "_commit_first", "_run_decode",
     "_plain_step", "_spec_step", "_verify_row", "_fixup_refeed",
     "_ensure_pages", "_shrink_pages", "_sync_pages", "_reap",
+    # device-resident fused loop (PR 8): the whole point is per-BLOCK
+    # host sync, so its tick functions must not smuggle dense host
+    # staging or unpacks back in (_build_fused is excluded — it runs
+    # once, at trace time, not per tick)
+    "_device_step", "_resync_row", "_sid_for", "_device_ready",
+    "_advance_sid", "_audit_sid",
 }
 
 ALLOC_FUNCS = {"zeros", "ones", "empty", "full", "tile"}
@@ -129,7 +135,8 @@ def _check_hot_scope(tree_nodes, path: str, lines: List[str],
     return out
 
 
-def lint_scheduler(path: str) -> List[Finding]:
+def _lint_named_funcs(path: str, names: Set[str],
+                      label: str) -> List[Finding]:
     with open(path) as f:
         src = f.read()
     lines = src.splitlines()
@@ -137,11 +144,25 @@ def lint_scheduler(path: str) -> List[Finding]:
     out: List[Finding] = []
     for node in ast.walk(tree):
         if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
-                and node.name in TICK_FUNCS:
+                and node.name in names:
             out.extend(_check_hot_scope(
                 ast.walk(node), path, lines,
-                f"tick-path function {node.name}()"))
+                f"{label} {node.name}()"))
     return out
+
+
+def lint_scheduler(path: str) -> List[Finding]:
+    return _lint_named_funcs(path, TICK_FUNCS, "tick-path function")
+
+
+# engine functions the scheduler tick reaches (speculative _verify_row
+# calls eng._pick per rejected position): same packed-mask rules apply
+ENGINE_HOT_FUNCS: Set[str] = {"_pick"}
+
+
+def lint_engine(path: str) -> List[Finding]:
+    return _lint_named_funcs(path, ENGINE_HOT_FUNCS,
+                             "engine hot function")
 
 
 def lint_kernel_dispatch(path: str) -> List[Finding]:
@@ -232,6 +253,7 @@ def main(argv: List[str]) -> int:
     else:
         targets = None
     sched = os.path.join(REPO, "src", "repro", "serving", "scheduler.py")
+    engine = os.path.join(REPO, "src", "repro", "serving", "engine.py")
     dispatch = os.path.join(REPO, "src", "repro", "kernels",
                             "masked_sample", "ops.py")
     core_dir = os.path.join(REPO, "src", "repro", "core")
@@ -240,6 +262,8 @@ def main(argv: List[str]) -> int:
     findings: List[Finding] = []
     if targets is None or sched in targets:
         findings.extend(lint_scheduler(sched))
+    if targets is None or engine in targets:
+        findings.extend(lint_engine(engine))
     if targets is None or dispatch in targets:
         findings.extend(lint_kernel_dispatch(dispatch))
     for fn in sorted(os.listdir(core_dir)):
