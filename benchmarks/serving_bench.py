@@ -15,6 +15,17 @@ tick-boundary invariants audited throughout.  Two passes:
 Assertions are the acceptance bars: the fault-free pass completes every
 request `ok`, and BOTH passes drain without leaking a single page.
 
+ISSUE 9 extends the workload and the rows.  The main passes drive a
+deterministic **traffic trace** — Poisson arrival offsets plus
+Zipf-distributed prompt lengths (most prompts short, a heavy tail of
+long ones), all derived from one seed — and the **traffic-replay mode**
+re-drives the identical trace and asserts every request's token ids
+are bitwise-equal across runs (``--replay`` runs just that check).  A
+**faulted-and-recovered** pass crashes a journaled device-loop run
+mid-decode under a ``device_timeout`` storm, restores it from the
+journal, and reports MTTR and replayed-token counts as a tracked
+history row.
+
 This file seeds the ROADMAP's perf-trajectory artifact for the serving
 layer: CI uploads ``BENCH_serving.json`` next to ``BENCH_mask.json`` /
 ``BENCH_decode.json`` so tok/s and tail latency get a tracked history.
@@ -22,8 +33,10 @@ layer: CI uploads ``BENCH_serving.json`` next to ``BENCH_mask.json`` /
 from __future__ import annotations
 
 import json
+import os
 import pathlib
 import subprocess
+import tempfile
 import time
 
 import jax
@@ -35,14 +48,18 @@ from repro.core import grammars
 from repro.core.sampling import GrammarSampler
 from repro.models import build_model
 from repro.serving import (ConstraintSpec, ContinuousBatchingScheduler,
-                           DecodeParams, EngineConfig, FaultInjector,
-                           Request, ServingEngine)
+                           DecodeParams, DegradationSupervisor,
+                           EngineConfig, FaultInjector, Request,
+                           ServingEngine, TokenJournal)
 from repro.tokenizer import train_bpe
 
 N_REQUESTS = 24
 CAPACITY = 4
 MAX_TOKENS = 24
 ARRIVAL_RATE_HZ = 40.0           # Poisson arrival intensity
+TRACE_SEED = 42                  # one seed -> the whole traffic trace
+ZIPF_A = 1.4                     # prompt-length Zipf exponent
+ZIPF_CAP = 40                    # prompt length cap in characters
 # rates are PER CONSULTATION (every mask build / device row / admission
 # draws once), so per-request failure odds compound over ~MAX_TOKENS
 # ticks; these values land the storm at roughly a 5%-per-request-phase
@@ -93,23 +110,31 @@ def _setup() -> ServingEngine:
     return eng
 
 
-def _requests():
+def _make_trace(seed: int = TRACE_SEED):
+    """Deterministic traffic trace: Poisson arrival offsets, Zipf prompt
+    lengths (most prompts short, a heavy tail of long ones — the shape
+    real traffic has), and a cycling grammar mix, all derived from one
+    seed so the identical trace can be replayed bit-for-bit."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / ARRIVAL_RATE_HZ,
+                                         N_REQUESTS))
+    lens = np.minimum(rng.zipf(ZIPF_A, size=N_REQUESTS), ZIPF_CAP)
     specs = [ConstraintSpec(grammar="json", mode="domino"),
              ConstraintSpec(grammar="c", mode="domino"),
              ConstraintSpec()]    # unconstrained rows ride along
-    return [Request(PROMPTS[i % len(PROMPTS)], specs[i % len(specs)],
-                    DecodeParams(max_tokens=MAX_TOKENS, seed=i))
-            for i in range(N_REQUESTS)]
+    reqs = []
+    for i in range(N_REQUESTS):
+        prompt = (f"req {i}: " + "key value " * ZIPF_CAP)[:int(lens[i])]
+        reqs.append(Request(prompt, specs[i % len(specs)],
+                            DecodeParams(max_tokens=MAX_TOKENS, seed=i)))
+    return arrivals, reqs
 
 
 def _drive(eng: ServingEngine, injector=None, label="fault_free",
-           verbose=True):
+           trace=None, verbose=True):
     """One serving pass: Poisson arrivals submitted by wall clock into a
     stepping scheduler; returns the metric record."""
-    rng = np.random.default_rng(42)   # arrival process, not sampling
-    arrivals = np.cumsum(rng.exponential(1.0 / ARRIVAL_RATE_HZ,
-                                         N_REQUESTS))
-    reqs = _requests()
+    arrivals, reqs = trace if trace is not None else _make_trace()
     sched = ContinuousBatchingScheduler(eng, capacity=CAPACITY,
                                         page_size=32,
                                         fault_injector=injector,
@@ -131,8 +156,12 @@ def _drive(eng: ServingEngine, injector=None, label="fault_free",
 
     lat = np.array([s.result.wall_time_s for s in sessions])
     n_tok = sum(s.result.n_tokens for s in sessions)
+    plens = np.array([len(r.prompt) for r in reqs])
     statuses = dict(sched.status_counts)
     rec = {
+        "prompt_chars_p50": float(np.percentile(plens, 50)),
+        "prompt_chars_max": int(plens.max()),
+        "_token_ids": [s.result.token_ids for s in sessions],
         "wall_s": wall,
         "n_requests": len(sessions),
         "n_tokens": n_tok,
@@ -242,6 +271,105 @@ def _drive_loop(eng: ServingEngine, device_loop: bool, label: str,
     return rec
 
 
+class _Crash(Exception):
+    """In-process stand-in for SIGKILL in the recovery drill."""
+
+
+def _drive_recovery(eng: ServingEngine, label="faulted_recovered",
+                    verbose=True):
+    """Crash + storm recovery drill (ISSUE 9): the certified device-loop
+    workload runs with the crash-consistent journal armed while a seeded
+    ``device_timeout`` storm walks the degradation ladder down and back;
+    the journal's crash hook then kills the run mid-decode after its
+    6th fsync, mid-decode.  ``engine.restore`` replays the journal and finishes the
+    workload — the row records MTTR (ladder round trip) and how many
+    acknowledged tokens were replayed rather than re-decoded."""
+    fd, path = tempfile.mkstemp(prefix="bench_recovery_",
+                                suffix=".journal")
+    os.close(fd)
+    os.unlink(path)
+
+    def _boom() -> None:
+        raise _Crash
+
+    try:
+        journal = TokenJournal(path, crash_after_syncs=6,
+                               crash_hook=_boom)
+        inj = FaultInjector(seed=3, rates={"device_timeout": 1.0},
+                            max_faults=2)
+        sup = DegradationSupervisor(max_retries=1, backoff_s=0.0,
+                                    recover_after=1)
+        sched = ContinuousBatchingScheduler(
+            eng, capacity=CAPACITY, page_size=32, device_loop=True,
+            sync_n=SYNC_N, journal=journal, fault_injector=inj,
+            supervisor=sup, debug_invariants=True)
+        for i in range(DEV_N_REQUESTS // 2):
+            sched.submit(Request(
+                PROMPTS[i % len(PROMPTS)],
+                ConstraintSpec(grammar="json", mode="domino"),
+                DecodeParams(max_tokens=DEV_MAX_TOKENS, seed=i)))
+        t0 = time.perf_counter()
+        try:
+            sched.run()
+            raise AssertionError("recovery drill never crashed — "
+                                 "workload too small for 6 syncs")
+        except _Crash:
+            pass
+        journal.dead = True          # freeze the file, as SIGKILL would
+        mttr = sched.sup.mttr_s
+        assert inj.n_fired("device_timeout") > 0
+        assert sched.sup.n_degrades >= 1
+        assert mttr is not None, "storm never completed a ladder round trip"
+
+        restored = eng.restore(path, max_batch=CAPACITY,
+                               device_loop=True, sync_n=SYNC_N)
+        results = restored.run()
+        wall = time.perf_counter() - t0
+        stats = restored.stats()
+        assert all(r.status == "ok" for r in results), \
+            {r.status for r in results}
+        assert stats["n_replayed_tokens"] > 0, \
+            "restore replayed nothing despite a mid-decode crash"
+        n_tok = sum(r.n_tokens for r in results)
+        rec = {
+            "label": label,
+            "wall_s": wall,
+            "n_requests": len(results),
+            "n_tokens": n_tok,
+            "tok_per_s": n_tok / wall,
+            "mttr_s": mttr,
+            "n_replayed_tokens": stats["n_replayed_tokens"],
+            "n_degrades": sched.sup.n_degrades,
+            "n_recovers": sched.sup.n_recovers,
+            "journal_syncs": stats["journal_syncs"],
+        }
+        if verbose:
+            print(f"  [serving/{label}] crash after 6 syncs -> restore: "
+                  f"{rec['n_replayed_tokens']} tokens replayed, "
+                  f"mttr={mttr * 1e3:.1f}ms, {n_tok} tok total",
+                  flush=True)
+        return rec
+    finally:
+        if os.path.exists(path):
+            os.unlink(path)
+
+
+def _replay_check(eng: ServingEngine, baseline, verbose=True):
+    """Traffic-replay mode: re-drive the IDENTICAL trace and assert every
+    request's token ids are bitwise-equal to the first pass — per-row
+    determinism must hold regardless of wall-clock batching jitter."""
+    replay = _drive(eng, injector=None, label="traffic_replay",
+                    trace=_make_trace(), verbose=verbose)
+    mismatches = [i for i, (a, b) in enumerate(
+        zip(baseline["_token_ids"], replay["_token_ids"])) if a != b]
+    assert not mismatches, \
+        f"traffic replay diverged on requests {mismatches}"
+    if verbose:
+        print(f"  [serving/traffic_replay] {len(replay['_token_ids'])} "
+              f"request(s) bitwise-identical across replays", flush=True)
+    return replay
+
+
 def _append_history(rows, path=HISTORY_PATH):
     """Append per-PR benchmark rows to the tracked JSONL history — one
     line per (commit, label), so the perf trajectory across PRs is a
@@ -250,7 +378,9 @@ def _append_history(rows, path=HISTORY_PATH):
     ts = time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())
     keep = ("label", "tok_per_s", "latency_p50_s", "latency_p99_s",
             "host_syncs_per_token", "n_tokens", "n_device_tokens",
-            "n_quotient_escapes", "n_table_rejects")
+            "n_quotient_escapes", "n_table_rejects", "mttr_s",
+            "n_replayed_tokens", "n_degrades", "n_recovers",
+            "prompt_chars_p50", "prompt_chars_max")
     with open(path, "a") as f:
         for row in rows:
             slim = {k: row[k] for k in keep if k in row}
@@ -270,10 +400,14 @@ def run(verbose: bool = True, json_path: str = "BENCH_serving.json"):
     warm.run()
 
     fault_free = _drive(eng, injector=None, label="fault_free",
-                        verbose=verbose)
+                        trace=_make_trace(), verbose=verbose)
+    # traffic-replay mode: the identical trace again, bitwise-compared
+    _replay_check(eng, fault_free, verbose=verbose)
     injector = FaultInjector(seed=0, rates=FAULT_RATES, max_faults=30)
     faulted = _drive(eng, injector=injector, label="faulted",
-                     verbose=verbose)
+                     trace=_make_trace(), verbose=verbose)
+    fault_free.pop("_token_ids")
+    faulted.pop("_token_ids")
 
     # device-resident fused loop vs per-token host loop (ISSUE 8)
     eng_dev = _setup_certified()
@@ -281,6 +415,8 @@ def run(verbose: bool = True, json_path: str = "BENCH_serving.json"):
                             verbose=verbose)
     device_loop = _drive_loop(eng_dev, device_loop=True,
                               label="device_loop", verbose=verbose)
+    # crash + storm + restore drill (ISSUE 9): MTTR and replayed tokens
+    recovered = _drive_recovery(eng_dev, verbose=verbose)
     speedup = device_loop["tok_per_s"] / host_loop["tok_per_s"]
     # acceptance bars: sustained speedup AND the sync economy it rests on
     assert speedup >= 1.5, \
@@ -295,21 +431,25 @@ def run(verbose: bool = True, json_path: str = "BENCH_serving.json"):
         "config": {"n_requests": N_REQUESTS, "capacity": CAPACITY,
                    "max_tokens": MAX_TOKENS,
                    "arrival_rate_hz": ARRIVAL_RATE_HZ,
+                   "trace_seed": TRACE_SEED,
+                   "zipf_a": ZIPF_A, "zipf_cap": ZIPF_CAP,
                    "fault_rates": FAULT_RATES,
                    "grammars": ["json", "c", "unconstrained"],
                    "sync_n": SYNC_N,
                    "dev_n_requests": DEV_N_REQUESTS,
                    "dev_max_tokens": DEV_MAX_TOKENS},
         "fault_free": fault_free,
+        "traffic_replay_identical": True,     # asserted above
         "faulted": faulted,
         "host_loop": host_loop,
         "device_loop": device_loop,
         "device_speedup": speedup,
+        "faulted_recovered": recovered,
     }
     pathlib.Path(json_path).write_text(json.dumps(record, indent=2))
     _append_history([{**fault_free, "label": "fault_free"},
                      {**faulted, "label": "faulted"},
-                     host_loop, device_loop])
+                     host_loop, device_loop, recovered])
     if verbose:
         print(f"  [serving] wrote {json_path} and appended "
               f"{HISTORY_PATH.name}", flush=True)
@@ -317,4 +457,17 @@ def run(verbose: bool = True, json_path: str = "BENCH_serving.json"):
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--replay", action="store_true",
+                    help="traffic-replay mode only: drive the seeded "
+                         "trace twice and assert bitwise-identical "
+                         "token ids (no artifacts written)")
+    args = ap.parse_args()
+    if args.replay:
+        _eng = _setup()
+        base = _drive(_eng, injector=None, label="fault_free",
+                      trace=_make_trace())
+        _replay_check(_eng, base)
+    else:
+        run()

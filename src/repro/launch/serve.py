@@ -72,6 +72,28 @@ def main() -> None:
                     help="registration-time grammar analysis policy: "
                          "'warn' reports traps/alignment gaps, 'strict' "
                          "refuses to serve a grammar with any")
+    ap.add_argument("--journal", default=None, metavar="PATH",
+                    help="crash-consistent token journal (write-ahead "
+                         "log): per-request lifecycle events and "
+                         "committed-token batches, fsynced at tick "
+                         "boundaries; restart with --restore to resume")
+    ap.add_argument("--journal-sync-every", type=int, default=1,
+                    help="fsync the journal every N ticks (larger = "
+                         "less durable tail, less write amplification)")
+    ap.add_argument("--restore", action="store_true",
+                    help="replay --journal PATH instead of submitting "
+                         "fresh prompts: live requests resume from "
+                         "their validated committed prefix (greedy rows "
+                         "bitwise-identical to an uninterrupted run)")
+    ap.add_argument("--crash-after-syncs", type=int, default=None,
+                    metavar="K",
+                    help="fault drill: SIGKILL this process after the "
+                         "journal's K-th fsync (exercised by "
+                         "tools/restart_smoke.py)")
+    ap.add_argument("--print-ids", action="store_true",
+                    help="emit one machine-readable 'IDS <rid> "
+                         "<token ids...>' line per result (restart-smoke "
+                         "bitwise comparison)")
     ap.add_argument("--checkpoint", default=None)
     args = ap.parse_args()
 
@@ -84,7 +106,7 @@ def main() -> None:
     from repro.core.sampling import GrammarSampler
     from repro.models import build_model
     from repro.serving import (ConstraintSpec, DecodeParams, Request,
-                               ServingEngine)
+                               ServingEngine, TokenJournal)
     from repro.tokenizer import BPETokenizer, train_bpe
     from repro.training import checkpoint
 
@@ -139,6 +161,38 @@ def main() -> None:
             print(f"[device-table] not certified (host path): "
                   f"{','.join(sorted(missing))}")
 
+    journal = None
+    if args.journal:
+        journal = TokenJournal(args.journal,
+                               sync_every=args.journal_sync_every,
+                               crash_after_syncs=args.crash_after_syncs)
+
+    if args.restore:
+        if journal is None:
+            ap.error("--restore requires --journal PATH")
+        # same deterministic engine (seeded tokenizer corpus + PRNGKey(0)
+        # init) as the crashed run, so recompute-prefill regenerates the
+        # exact logits; the reopened journal keeps the resumed run durable
+        sched = engine.restore(
+            args.journal, max_batch=args.slots, journal=journal,
+            paged=False if args.no_paged else None,
+            page_size=args.page_size, n_pages=args.pool_pages,
+            device_loop=args.device_loop, sync_n=args.sync_n)
+        n_live = len(sched.waiting)
+        results = sched.run()
+        print(f"[restore] {args.journal}: {len(results)} journaled "
+              f"request(s), {n_live} resumed live; "
+              f"stats={sched.stats()}")
+        for r in results:
+            print(f"--- out[status={r.status}, {r.n_tokens} toks, "
+                  f"{r.n_replayed_tokens} replayed]: {r.text[:120]!r}"
+                  + (f" error={r.error}" if r.error else ""))
+        if args.print_ids:
+            for s in sorted(sched.finished, key=lambda s: s.rid):
+                print(f"IDS {s.rid} " + " ".join(
+                    str(t) for t in s.result.token_ids))
+        return
+
     decode = DecodeParams(
         temperature=args.temperature, max_tokens=args.max_tokens,
         speculative=args.speculative, spec_s=args.spec_s,
@@ -164,7 +218,7 @@ def main() -> None:
         for i in range(args.prompts)]
     labels = [gnames[i % len(gnames)] for i in range(args.prompts)]
 
-    if len(requests) > 1:
+    if len(requests) > 1 or journal is not None:
         # continuous batching covers every arch (SSM/SWA rows are admitted
         # by exact-length prefill; speculation refeeds per row); pure
         # full-attention/MLA stacks serve from a paged KV pool; rows mix
@@ -178,7 +232,8 @@ def main() -> None:
             paged=False if args.no_paged else None,
             page_size=args.page_size, n_pages=args.pool_pages,
             queue_limit=args.queue_limit,
-            device_loop=args.device_loop, sync_n=args.sync_n)
+            device_loop=args.device_loop, sync_n=args.sync_n,
+            journal=journal)
     else:
         results = [engine.generate(r) for r in requests]
     for lbl, req, r in zip(labels, requests, results):
@@ -191,6 +246,9 @@ def main() -> None:
                  if args.device_loop else "")
               + f"]: {r.text[:120]!r}"
               + (f" error={r.error}" if r.error else ""))
+    if args.print_ids:
+        for rid, r in enumerate(results):
+            print(f"IDS {rid} " + " ".join(str(t) for t in r.token_ids))
 
 
 if __name__ == "__main__":

@@ -1,11 +1,16 @@
 from repro.serving.engine import EngineConfig, ServingEngine
 from repro.serving.faults import (FaultInjector, InjectedFault,
                                   InvariantViolation, check_invariants)
+from repro.serving.journal import (JournalEntry, TokenJournal, read_records,
+                                   replay_journal)
 from repro.serving.request import ConstraintSpec, DecodeParams, Request
 from repro.serving.scheduler import ContinuousBatchingScheduler
 from repro.serving.session import GenerationResult, Session
+from repro.serving.supervisor import DegradationSupervisor
 
 __all__ = ["ServingEngine", "EngineConfig", "GenerationResult", "Session",
            "ContinuousBatchingScheduler", "ConstraintSpec", "DecodeParams",
            "Request", "FaultInjector", "InjectedFault",
-           "InvariantViolation", "check_invariants"]
+           "InvariantViolation", "check_invariants", "TokenJournal",
+           "JournalEntry", "read_records", "replay_journal",
+           "DegradationSupervisor"]

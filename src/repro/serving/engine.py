@@ -848,7 +848,9 @@ class ServingEngine:
                        fault_injector=None,
                        debug_invariants: bool = False,
                        device_loop: bool = False,
-                       sync_n: int = 8
+                       sync_n: int = 8,
+                       journal=None,
+                       supervisor=None
                        ) -> List[GenerationResult]:
         """Serve ``requests`` (Requests or bare prompt strings) through
         the continuous-batching scheduler.  Rows may mix grammars,
@@ -880,6 +882,12 @@ class ServingEngine:
         :meth:`precompute`); ``sync_n`` is the number of decode steps
         fused per host sync.  Rows without a certified table decode on
         the host path, token-for-token identical to ``device_loop=False``.
+
+        ``journal`` wires a
+        :class:`~repro.serving.journal.TokenJournal` (crash-consistent
+        WAL — see :meth:`restore`); ``supervisor`` a
+        :class:`~repro.serving.supervisor.DegradationSupervisor`
+        (watchdogs + the fused->host->dense degradation ladder).
         """
         from repro.serving.scheduler import ContinuousBatchingScheduler
         cap = min(len(requests), max_batch) if max_batch else len(requests)
@@ -896,10 +904,41 @@ class ServingEngine:
             default_deadline_s=default_deadline_s,
             fault_injector=fault_injector,
             debug_invariants=debug_invariants,
-            device_loop=device_loop, sync_n=sync_n, **kwargs)
+            device_loop=device_loop, sync_n=sync_n,
+            journal=journal, supervisor=supervisor, **kwargs)
         sessions = [sched.submit(r) for r in requests]
         sched.run()
         return [s.result for s in sessions]
+
+    def restore(self, journal_path: str, max_batch: Optional[int] = None,
+                journal=None, **scheduler_kwargs):
+        """Cold-restart recovery: replay the crash journal at
+        ``journal_path`` and return a scheduler pre-loaded with every
+        journaled request — terminal requests carry their journaled
+        result, live requests are reconstructed (prompt + validated
+        committed prefix replayed through a fresh concrete checker, RNG
+        stream restored) and queued for re-prefill through the
+        recompute-preemption machinery.  Call ``run()`` (or ``step()``)
+        on the returned scheduler to finish them; greedy rows complete
+        bitwise-identical to an uninterrupted run.
+
+        Pass ``journal`` (typically ``TokenJournal(journal_path)``, which
+        truncates any torn tail) to keep the resumed run durable in the
+        SAME file — replayed state is journaled idempotently, so repeated
+        crash/restore cycles converge instead of compounding."""
+        from repro.serving.journal import replay_journal
+        from repro.serving.scheduler import ContinuousBatchingScheduler
+        entries = replay_journal(journal_path)
+        cap = scheduler_kwargs.pop("capacity", None)
+        if cap is None:
+            live = sum(1 for e in entries.values()
+                       if e.terminal is None and e.recoverable)
+            cap = max(1, min(live, max_batch) if max_batch else live)
+        sched = ContinuousBatchingScheduler(
+            self, capacity=cap, journal=journal, **scheduler_kwargs)
+        for entry in entries.values():
+            sched.adopt(entry)
+        return sched
 
     # -- template mode ------------------------------------------------------------
 

@@ -29,6 +29,19 @@ the two tools the chaos suite drives:
                           are output-invariant by design)
      ``mask_delay``       sleep ``delay_s`` inside a mask build (drives
                           deadline enforcement)
+     ``device_timeout``   pretend a fused-block dispatch wedged past its
+                          watchdog (consulted PRE-dispatch so retry is
+                          donation-safe; drives the degradation ladder)
+     ``device_error``     simulate an XLA/runtime error surfacing at a
+                          device readback (readback / post-block phase)
+     ``alloc_fail``       simulate an HBM allocation failure during page
+                          growth (drives capacity shrink + preemption)
+     ``table_corrupt``    pretend a device-table row audit found a
+                          corrupted mask row (drives audited demotion)
+     ``journal_torn_write``  tear a journal write mid-frame (the torn
+                          tail must truncate away on restart)
+     ``crash_point``      crash the process at a journal fsync boundary
+                          (before or after — both windows are exercised)
 
  - :func:`check_invariants` — the debug-mode tick invariant checker:
    free-list/block-table consistency (every page exactly once across
@@ -62,7 +75,8 @@ class InvariantViolation(AssertionError):
 
 #: every site the scheduler consults, in tick-phase order
 SITES = ("prefill_nan", "decode_nan", "mask_error", "advance_error",
-         "page_exhaustion", "mask_delay")
+         "page_exhaustion", "mask_delay", "device_timeout", "device_error",
+         "alloc_fail", "table_corrupt", "journal_torn_write", "crash_point")
 
 
 @dataclasses.dataclass(frozen=True)

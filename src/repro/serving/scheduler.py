@@ -105,6 +105,7 @@ per-request outputs match ``ServingEngine.generate`` token-for-token.
 from __future__ import annotations
 
 import collections
+import dataclasses
 import functools
 import math
 import time
@@ -123,8 +124,11 @@ from repro.kernels.masked_sample.ops import (masked_argmax,
 from repro.models import kvcache
 from repro.serving.faults import (FaultInjector, InjectedFault,
                                   InvariantViolation, check_invariants)
-from repro.serving.request import Request, select_token
+from repro.serving.journal import JournalEntry, TokenJournal
+from repro.serving.request import (ConstraintSpec, DecodeParams, Request,
+                                   select_token)
 from repro.serving.session import GenerationResult, Session
+from repro.serving.supervisor import DegradationSupervisor
 
 
 # -- page allocation -----------------------------------------------------------
@@ -314,7 +318,9 @@ class ContinuousBatchingScheduler:
                  default_deadline_s: Optional[float] = None,
                  fault_injector: Optional[FaultInjector] = None,
                  debug_invariants: bool = False,
-                 device_loop: bool = False, sync_n: int = 8):
+                 device_loop: bool = False, sync_n: int = 8,
+                 journal: Optional[TokenJournal] = None,
+                 supervisor: Optional[DegradationSupervisor] = None):
         self.eng = engine
         self.capacity = max(1, capacity)
         self.overlap = overlap
@@ -470,6 +476,33 @@ class ContinuousBatchingScheduler:
         self._finished_now: List[Session] = []
         self.status_counts = collections.Counter()
         self._fail_log: List = []      # (rid, error) per quarantined row
+        # durability + degradation (ISSUE 9 tentpole).  The journal only
+        # BUFFERS during tick phases; all its file I/O happens in
+        # _journal_tick at the tick boundary (lint rule R5 enforces
+        # this).  _jmark[rid] = tokens already journaled for that rid, so
+        # each tick writes a commit DELTA and replay merges idempotently.
+        self.journal = journal
+        self._jmark: Dict[int, int] = {}
+        # supervisor: engine-wide fused -> host -> dense ladder for when
+        # the DEVICE is sick (row-level faults stay quarantined per row).
+        # A plain default supervisor never trips (no watchdogs, only
+        # degrades on real dispatch errors / injected device faults).
+        self.sup = supervisor or DegradationSupervisor()
+        # effective capacity under HBM pressure: alloc_fail shrinks it
+        # (preempting the excess to the queue) and each clean tick grows
+        # it back toward the configured capacity
+        self._cap_eff = self.capacity
+        self.n_engine_resets = 0       # cache/logits re-inits after a
+        #                                device error escaped a dispatch
+        self.n_capacity_shrinks = 0    # alloc_fail-driven _cap_eff drops
+        self.n_deadline_clamps = 0     # fused blocks clamped below
+        #                                sync_n by a resident deadline
+        self.n_replayed_tokens = 0     # journal-restored (not re-decoded)
+        self._last_block_steps = 0     # steps the last fused block ran
+        # committed-tokens-per-second EWMA over fused blocks; prices a
+        # resident deadline into a block-step cap (0.0 = unprimed)
+        self._tok_s_ema = 0.0
+        self._shrunk_tick = False      # alloc_fail fired this tick
 
     # -- public API -------------------------------------------------------------
 
@@ -492,6 +525,7 @@ class ContinuousBatchingScheduler:
         """
         sess = self.eng.make_session(self._next_rid, request, extra_inputs)
         self._next_rid += 1
+        self._journal_submit(sess)
         if self.queue_limit is not None \
                 and len(self.waiting) >= self.queue_limit:
             self._finish(sess, status="rejected",
@@ -522,6 +556,21 @@ class ContinuousBatchingScheduler:
         done = sorted(self.finished, key=lambda s: s.rid)
         return [s.result for s in done]
 
+    def stats(self) -> Dict[str, object]:
+        """Operational counters for benchmarks and monitoring: the
+        degradation-ladder state plus durability/pressure counters."""
+        s = self.sup.stats()
+        s.update(
+            n_engine_resets=self.n_engine_resets,
+            n_capacity_shrinks=self.n_capacity_shrinks,
+            n_deadline_clamps=self.n_deadline_clamps,
+            n_replayed_tokens=self.n_replayed_tokens,
+            cap_eff=self._cap_eff,
+            journal_syncs=(0 if self.journal is None
+                           else self.journal.n_syncs),
+        )
+        return s
+
     def step(self) -> List[Session]:
         """One scheduler tick: reap -> admit -> select -> decode.
         Returns sessions that reached a terminal status since the last
@@ -539,6 +588,8 @@ class ContinuousBatchingScheduler:
             else:
                 self._plain_step()
         self._reset_vacant_lens()
+        self._journal_tick()
+        self._supervisor_tick()
         if self.debug_invariants:
             problems = check_invariants(self)
             if problems:
@@ -625,6 +676,8 @@ class ContinuousBatchingScheduler:
     def _admit(self) -> None:
         eng = self.eng
         while self.waiting and None in self.slots:
+            if sum(s is not None for s in self.slots) >= self._cap_eff:
+                break      # capacity shrunk under allocation pressure
             slot = self.slots.index(None)
             sess = self.waiting[0]
             # re-admission after preemption re-prefills the generated
@@ -700,6 +753,9 @@ class ContinuousBatchingScheduler:
             # the checker's CURRENT abstract state
             self._dev_state[slot] = self._sid_for(sess)
             self._dev_age[slot] = 0
+            if self.journal is not None:
+                self.journal.append({"kind": "admit", "rid": sess.rid,
+                                     "slot": slot})
             if self._inject("prefill_nan", sess):
                 self._logits = self._logits.at[slot].set(jnp.nan)
 
@@ -727,6 +783,14 @@ class ContinuousBatchingScheduler:
         if error is not None and sess.error is None:
             sess.error = error
         sess.finish(self.eng.tok.decode)
+        if self.journal is not None:
+            self._journal_commit(sess)
+            self.journal.append({
+                "kind": "terminal", "rid": sess.rid,
+                "status": sess.result.status, "error": sess.result.error,
+                "finished": sess.finished_eos,
+                "dead_end": sess.dead_end})
+            self._jmark.pop(sess.rid, None)
         if sess.slot >= 0:
             self._premask.pop(sess.slot, None)
             self._dev_state[sess.slot] = OFF_FRONTIER
@@ -765,6 +829,186 @@ class ContinuousBatchingScheduler:
             if sess is not None and self._inject(site, sess):
                 self._logits = self._logits.at[slot].set(jnp.nan)
 
+    # -- durability: write-ahead journal (ISSUE 9 tentpole) ---------------------
+    #
+    # Tick phases only BUFFER records (journal.append is pure host
+    # bookkeeping); the one place file I/O happens is _journal_tick at
+    # the tick boundary, which lint rule R5 keeps off the tick functions.
+
+    def _journal_submit(self, sess: Session) -> None:
+        """Buffer the submit record: everything replay needs to rebuild
+        the request (prompt + ConstraintSpec + DecodeParams fields).  A
+        request that cannot be serialized (ad-hoc grammar object,
+        extra_inputs pytrees) is journaled as non-recoverable so restore
+        reports it explicitly instead of resurrecting it wrong."""
+        if self.journal is None:
+            return
+        rec = {"kind": "submit", "rid": sess.rid, "prompt": sess.prompt}
+        recoverable, reason = True, None
+        spec = getattr(sess.request, "constraint", None)
+        if spec is not None and spec.grammar is not None \
+                and not isinstance(spec.grammar, str):
+            recoverable = False
+            reason = ("ad-hoc grammar object is not serializable; "
+                      "register it by name to make the request "
+                      "recoverable")
+            rec["constraint"] = None
+        else:
+            rec["constraint"] = (None if spec is None
+                                 else dataclasses.asdict(spec))
+        dec = getattr(sess.request, "decode", None)
+        rec["decode"] = None if dec is None else dataclasses.asdict(dec)
+        if sess.extra_inputs:
+            recoverable = False
+            reason = "extra_inputs are not journaled"
+        rec["recoverable"] = recoverable
+        rec["reason"] = reason
+        self.journal.append(rec)
+
+    def _journal_commit(self, sess: Session) -> None:
+        """Buffer a commit DELTA: the session's checker-validated tokens
+        beyond what was already journaled, tagged with their offset so
+        replay merges idempotently (a re-written delta contributes
+        nothing).  The sampling-RNG state rides in the same record as
+        the draws that advanced it, so a restored sampled row resumes
+        its exact stream."""
+        done = len(sess.out_ids)
+        mark = self._jmark.get(sess.rid, 0)
+        if done <= mark:
+            return
+        rec = {"kind": "commit", "rid": sess.rid, "off": mark,
+               "toks": [int(t) for t in sess.out_ids[mark:]],
+               "n_draws": sess.n_draws}
+        if sess._rng is not None:
+            rec["rng"] = sess._rng.bit_generator.state
+        self.journal.append(rec)
+        self._jmark[sess.rid] = done
+
+    def _journal_tick(self) -> None:
+        """The tick-boundary durability point: buffer commit deltas for
+        every live session that gained tokens this tick (resident AND
+        freshly-preempted), then let the journal do its batched
+        write + fsync.  The ONLY tick-path call allowed to flush."""
+        if self.journal is None:
+            return
+        for sess in list(self.slots) + list(self.waiting):
+            if sess is not None and sess.result is None:
+                self._journal_commit(sess)
+        self.journal.commit_tick()
+
+    # -- degradation supervisor (ISSUE 9 tentpole) ------------------------------
+
+    def _supervisor_tick(self) -> None:
+        """Close the tick for the degradation ladder: an alloc_fail-free
+        tick regrows effective capacity one slot, and the supervisor
+        counts clean ticks toward climbing fused <- host <- dense."""
+        if self._shrunk_tick:
+            self._shrunk_tick = False
+        elif self._cap_eff < self.capacity:
+            self._cap_eff += 1
+        self.sup.tick_ok()
+
+    def _engine_reset(self, reason: str) -> None:
+        """The device surface is untrustworthy after an error escaped a
+        dispatch (the fused call donates the cache, so its buffers may be
+        gone): recompute-preempt every resident — validated prefixes ride
+        along, so outputs are unchanged — and re-initialize the batch
+        cache and the staged logits.  Youngest preempts first, so the
+        oldest resident lands at the queue front for re-admission."""
+        self.n_engine_resets += 1
+        self._fail_log.append((None, f"engine reset: {reason}"))
+        for sess in sorted((s for s in self.slots if s is not None),
+                           key=lambda s: s.t_admit, reverse=True):
+            self._preempt(sess)
+        eng = self.eng
+        if self.paged:
+            self.cache = eng.model.init_cache(
+                self.capacity, eng.max_len, page_size=self.page_size,
+                n_pages=self.n_pages)
+            self._pages_dirty = True
+        else:
+            self.cache = eng.model.init_cache(self.capacity, eng.max_len)
+        self.cache["len"] = jnp.zeros((self.capacity,), jnp.int32)
+        self._logits = jnp.zeros(
+            (self.capacity, eng.model.padded_vocab), jnp.float32)
+        self._premask.clear()
+
+    # -- restart recovery -------------------------------------------------------
+
+    def adopt(self, entry: JournalEntry) -> Session:
+        """Reconstruct one journal-replayed request (restart recovery).
+
+        Terminal entries become finished shell sessions (their result is
+        rebuilt from the journaled tokens/status, nothing re-decodes).
+        Live entries rebuild the Request from the journaled spec fields,
+        replay the validated committed prefix through a fresh concrete
+        checker via ``advance()`` (a rejection is quarantined — the
+        journal only ever holds validated tokens, so this means the
+        grammar registry changed under us), restore the sampling RNG
+        stream, and re-enter the waiting queue: admission re-prefills
+        prompt + prefix exactly like a recompute preemption, which is
+        what makes the resumed output bitwise-identical."""
+        self._next_rid = max(self._next_rid, entry.rid + 1)
+        if not entry.recoverable:
+            sess = self.eng.make_session(entry.rid, entry.prompt)
+            self._finish(sess, status="internal_error",
+                         error=f"unrecoverable from journal: "
+                               f"{entry.reason}")
+            return sess
+        req: Union[str, Request] = entry.prompt
+        if entry.constraint is not None or entry.decode is not None:
+            req = Request(
+                prompt=entry.prompt,
+                constraint=(ConstraintSpec(**entry.constraint)
+                            if entry.constraint is not None
+                            else ConstraintSpec(grammar=None,
+                                                mode="unconstrained")),
+                decode=(DecodeParams(**entry.decode)
+                        if entry.decode is not None else DecodeParams()))
+        sess = self.eng.make_session(entry.rid, req)
+        if entry.terminal is not None:
+            sess.out_ids = [int(t) for t in entry.toks]
+            sess.n_replayed = len(entry.toks)
+            sess.n_draws = entry.n_draws
+            sess.finished_eos = entry.terminal["finished"]
+            sess.dead_end = entry.terminal["dead_end"]
+            st = entry.terminal["status"]
+            self._jmark[entry.rid] = len(entry.toks)
+            self._finish(sess,
+                         status=(None if st in ("ok", "dead_end")
+                                 else st),
+                         error=entry.terminal["error"])
+            return sess
+        for tok in entry.toks:
+            try:
+                ok = (sess.checker.advance(int(tok))
+                      if sess.checker is not None else True)
+            except Exception as e:
+                self._fail(sess, f"journal replay: checker failed at "
+                                 f"position {len(sess.out_ids)}: {e!r}")
+                return sess
+            if not ok:
+                self._fail(sess, f"journal replay: checker rejected "
+                                 f"validated token {int(tok)} at position "
+                                 f"{len(sess.out_ids)} (grammar changed?)")
+                return sess
+            sess.out_ids.append(int(tok))
+            sess.budget -= 1
+        sess.n_replayed = len(entry.toks)
+        self.n_replayed_tokens += len(entry.toks)
+        sess.n_draws = entry.n_draws
+        if entry.rng_state is not None and sess.decode is not None:
+            rng = sess.decode.make_rng()
+            rng.bit_generator.state = entry.rng_state
+            sess._rng = rng
+        sess.n_preempt = entry.n_preempts
+        self._jmark[entry.rid] = len(sess.out_ids)
+        if sess.budget <= 0:
+            self._finish(sess)
+            return sess
+        self.waiting.append(sess)
+        return sess
+
     # -- page bookkeeping -------------------------------------------------------
 
     def _free_slot_pages(self, slot: int) -> None:
@@ -790,6 +1034,8 @@ class ContinuousBatchingScheduler:
         sess.slot = -1
         sess.n_preempt += 1
         self.n_preempt += 1
+        if self.journal is not None:
+            self.journal.append({"kind": "preempt", "rid": sess.rid})
         self.waiting.appendleft(sess)
 
     def _ensure_pages(self, width: int) -> None:
@@ -811,7 +1057,16 @@ class ContinuousBatchingScheduler:
                     need[slot] = want
             shortfall = sum(w - int(self._n_pages_row[s])
                             for s, w in need.items())
-            if shortfall <= self.pool.available and not (
+            if shortfall and self._inject("alloc_fail"):
+                # simulated HBM allocation failure: this is pressure, not
+                # a row fault — shrink effective capacity (admission
+                # stops refilling the slot about to be reclaimed; clean
+                # ticks grow it back) and preempt-to-queue below
+                self._cap_eff = max(
+                    1, sum(s is not None for s in self.slots) - 1)
+                self.n_capacity_shrinks += 1
+                self._shrunk_tick = True
+            elif shortfall <= self.pool.available and not (
                     shortfall and self._inject("page_exhaustion")):
                 break
             victims = [s for s in self.slots if s is not None]
@@ -921,11 +1176,26 @@ class ContinuousBatchingScheduler:
         sessions; updates intervention stats.  Returns {slot: token}."""
         eng = self.eng
         v = eng._v
+
         # one fused readback: per-row raw argmax + per-row finiteness over
-        # the real vocab columns (padded columns are legitimately -inf)
-        raw_dev, fin_dev = self._raw_stats(self._logits)
-        raw = np.asarray(raw_dev)
-        finite = np.asarray(fin_dev)
+        # the real vocab columns (padded columns are legitimately -inf).
+        # Guarded: a runtime error HERE is the device being sick, not a
+        # row fault — bounded retry, then engine reset + ladder step.
+        def _readback():
+            raw_dev, fin_dev = self._raw_stats(self._logits)
+            return np.asarray(raw_dev), np.asarray(fin_dev)
+
+        ok, got = self.sup.guard(
+            "tick_readback", _readback,
+            inject=lambda: self._inject("device_error"))
+        if not ok:
+            # every resident recompute-preempts with its validated prefix
+            # intact, so outputs are unchanged; selection commits nothing
+            # this tick and the next tick runs one ladder level down
+            self._engine_reset(f"tick readback failed: {got!r}")
+            self.sup.degrade("tick_readback", got)
+            return {}
+        raw, finite = got
         self.n_host_syncs += 1         # per-token selection sync point
         masks = self._mask_words              # persistent staging buffer
         self._dev_gather[:] = OFF_FRONTIER
@@ -1002,10 +1272,14 @@ class ContinuousBatchingScheduler:
                 self._dts.mask_dev, jnp.asarray(self._dev_gather), m_stage)
         greedy = [s for s in occupied if self.slots[s].temperature <= 0.0]
         if greedy:
-            idx, _ = masked_argmax(self._logits[:, :v], m_stage)
+            # ladder level >= 2 (dense): the jnp reference oracle — same
+            # greedy selection bitwise (lowest-index ties), no pallas
+            # dispatch at all, for when the kernel path itself is suspect
+            idx, _ = masked_argmax(self._logits[:, :v], m_stage,
+                                   use_ref=self.sup.level >= 2)
             toks[greedy] = np.asarray(idx)[greedy]
         sampled = [s for s in occupied if s not in greedy]
-        if sampled and self.device_loop:
+        if sampled and self.device_loop and self.sup.level < 2:
             # device sampler (Gumbel-max over the packed legal set):
             # per-row temperature, per-row counter-based keys — the
             # stream is a pure function of (seed, draw index), so output
@@ -1218,10 +1492,18 @@ class ContinuousBatchingScheduler:
         bits = sess.checker.mask_bits()
         sess.mask_time += time.perf_counter() - t0
         self._dev_age[slot] = 0
-        if np.array_equal(self._dts.mask_host[sid], bits):
+        # table_corrupt simulates a corrupted device-table mask row; the
+        # audit catches it exactly like a real quotient escape would
+        corrupt = self._inject("table_corrupt", sess)
+        if not corrupt and np.array_equal(self._dts.mask_host[sid], bits):
             return sid
         self.n_quotient_escapes += 1
         self._premask[slot] = bits
+        if self.journal is not None:
+            self.journal.append({
+                "kind": "demote", "rid": sess.rid,
+                "reason": ("injected table corruption" if corrupt
+                           else "mask-row audit mismatch")})
         return OFF_FRONTIER
 
     def _device_ready(self) -> bool:
@@ -1234,8 +1516,8 @@ class ContinuousBatchingScheduler:
         the per-token path, where certified rows still gather their
         masks from the device table."""
         if not self.device_loop or self._dts is None or self.sync_n < 2 \
-                or self.eng._needs_refeed:
-            return False
+                or self.eng._needs_refeed or self.sup.level > 0:
+            return False     # degraded: the ladder owns the path choice
         ready = False
         for slot, sess in enumerate(self.slots):
             if sess is None:
@@ -1279,13 +1561,16 @@ class ContinuousBatchingScheduler:
         cap = self.capacity
 
         def fused(params, cache, lg, state, active, rem, eos_ids,
-                  nan_plan, mask_tab, trans_tab):
+                  nan_plan, mask_tab, trans_tab, n_cap):
             snap_len = cache["len"]
             toks0 = jnp.full((cap, n), -1, jnp.int32)
             raws0 = jnp.full((cap, n), -1, jnp.int32)
 
+            # n_cap is a TRACED operand (the deadline clamp changes it
+            # block to block without recompiling); the static n still
+            # bounds every buffer shape
             def cond(c):
-                return (c[0] < n) & jnp.any(c[5])
+                return (c[0] < jnp.minimum(n, n_cap)) & jnp.any(c[5])
 
             def body(c):
                 (i, cache, lg, out_lg, state, active, rem, toks, raws,
@@ -1329,6 +1614,32 @@ class ContinuousBatchingScheduler:
 
         return jax.jit(fused, donate_argnums=(1,))
 
+    def _deadline_cap(self) -> int:
+        """Clamp the next fused block's step count to the nearest
+        resident deadline: a full sync_n block can overshoot a deadline
+        by up to sync_n tokens' wall time, so price the remaining budget
+        of every deadline-carrying resident through the measured
+        tokens/s EWMA and stop the block there (>= 1 step: lifecycle
+        checks still only run at block boundaries, so the block must
+        make progress).  Unprimed EWMA (first block) -> no clamp."""
+        n_cap = self.sync_n
+        if self._tok_s_ema <= 0.0:
+            return n_cap
+        now = time.perf_counter()
+        for sess in self.slots:
+            if sess is None:
+                continue
+            deadline = sess.deadline_s
+            if deadline is None:
+                deadline = self.default_deadline_s
+            if deadline is None:
+                continue
+            left = deadline - (now - sess.t_submit)
+            n_cap = min(n_cap, max(1, int(left * self._tok_s_ema)))
+        if n_cap < self.sync_n:
+            self.n_deadline_clamps += 1
+        return n_cap
+
     def _device_step(self) -> None:
         """One fused tick: run up to ``sync_n`` decode steps in a single
         device call, then ONE host readback, then replay every committed
@@ -1360,25 +1671,74 @@ class ContinuousBatchingScheduler:
                             "decode_nan", sess)
         if self._fused_fn is None:
             self._fused_fn = self._build_fused()
+        n_cap = self._deadline_cap()
+        # the fused call DONATES the cache, so it must never be retried:
+        # injected device_timeout is consulted PRE-dispatch (nothing
+        # dispatched yet -> retry-safe no-op thunk), and a real exception
+        # below resets the engine instead of re-running the block
+        ok, err = self.sup.guard(
+            "fused_dispatch", lambda: None,
+            inject=lambda: self._inject("device_timeout"))
+        if not ok:
+            self.sup.degrade("fused_dispatch", err)
+            return           # nothing ran; next tick takes the host path
         t0 = time.perf_counter()
-        (self.cache, out_lg, state_dev, toks_dev, raws_dev, n_fed_dev,
-         fault_dev, steps_dev) = self._fused_fn(
-            eng.params, self.cache, self._logits,
-            jnp.asarray(state0), jnp.asarray(active0), jnp.asarray(rem0),
-            jnp.asarray(eos0), jnp.asarray(self._nan_plan),
-            self._dts.mask_dev, self._dts.trans_dev)
-        out_lg.block_until_ready()
+        try:
+            (self.cache, out_lg, state_dev, toks_dev, raws_dev, n_fed_dev,
+             fault_dev, steps_dev) = self._fused_fn(
+                eng.params, self.cache, self._logits,
+                jnp.asarray(state0), jnp.asarray(active0),
+                jnp.asarray(rem0), jnp.asarray(eos0),
+                jnp.asarray(self._nan_plan),
+                self._dts.mask_dev, self._dts.trans_dev,
+                jnp.int32(n_cap))
+            out_lg.block_until_ready()
+        except Exception as e:
+            # an XLA/runtime error escaped the fused dispatch and the
+            # donated cache is unrecoverable: reset the engine surface
+            # (residents recompute-preempt, outputs unchanged) and step
+            # down the ladder
+            self._engine_reset(f"fused block failed: {e!r}")
+            self.sup.degrade("fused_block", e)
+            return
         dt = time.perf_counter() - t0
         self._logits = out_lg
         # the block's ONE host sync: tokens, states, counts, faults and
         # step count all come back in a single readback
         self.n_host_syncs += 1
+        if self._inject("device_error"):
+            # simulated corrupt readback: nothing from this block can be
+            # trusted, so discard it wholesale — no token was committed
+            # or journaled, so recompute-preemption keeps outputs exact
+            self._engine_reset("device_error at fused-block readback")
+            self.sup.degrade("fused_readback",
+                             RuntimeError("injected device_error at "
+                                          "fused-block readback"))
+            return
+        if self.sup.block_watchdog_s is not None \
+                and dt > self.sup.block_watchdog_s:
+            # the block FINISHED, just too slowly: its results are good
+            # (commit them below) but the device is suspect — degrade
+            self.sup.n_watchdog_trips += 1
+            self.sup.degrade(
+                "fused_block_watchdog",
+                TimeoutError(f"fused block took {dt:.3f}s > watchdog "
+                             f"{self.sup.block_watchdog_s:g}s"))
         toks = np.asarray(toks_dev)
         raws = np.asarray(raws_dev)
         state_out = np.asarray(state_dev)
         n_fed = np.asarray(n_fed_dev)
         fault = np.asarray(fault_dev)
         steps_run = int(steps_dev)
+        self._last_block_steps = steps_run
+        fed_total = int(n_fed.sum())
+        if fed_total and dt > 0:
+            # committed-tokens/s EWMA: prices the next block's deadline
+            # clamp (_deadline_cap).  alpha=0.3 — quick to prime, stable
+            # against one slow (compile) block.
+            rate = fed_total / dt
+            self._tok_s_ema = (rate if self._tok_s_ema == 0.0
+                               else 0.7 * self._tok_s_ema + 0.3 * rate)
         self.n_fwd += steps_run
         for slot, sess in enumerate(list(self.slots)):
             if sess is None:
@@ -1402,6 +1762,13 @@ class ContinuousBatchingScheduler:
         recompute-preempts it with the validated prefix intact; a device
         fault flag surfaces as the same ``internal_error`` the host
         finiteness check raises."""
+        if sess.cancel_requested:
+            # cancellation arrived while the block was in flight: honor
+            # it at THIS block boundary — none of the block's tokens are
+            # committed (or journaled) for this row, and the next tick's
+            # lifecycle sweep terminates it with `cancelled`, so a
+            # cancel never trails by more than one block
+            return
         ch = sess.checker
         for j in range(steps_run):
             tok = int(toks_row[j])

@@ -49,6 +49,9 @@ class GenerationResult:
     # tokens committed through the device-resident fused decode loop
     # (certified-grammar rows under device_loop=True; 0 on the host path)
     n_device_tokens: int = 0
+    # tokens restored from the crash journal on restart (replayed through
+    # the concrete checker, not re-decoded) rather than generated live
+    n_replayed_tokens: int = 0
     # the checker reached a state with NO legal token (including EOS).
     # Output up to this point is a valid *prefix* but cannot be completed;
     # forcing EOS here would silently emit grammar-violating output.
@@ -134,6 +137,8 @@ class Session:
     # tokens this request committed through the device-resident fused
     # decode loop (0 for host-path rows)
     n_device_tokens: int = 0
+    # tokens restored from the crash journal (see GenerationResult)
+    n_replayed: int = 0
     mask_time: float = 0.0            # this request's checker time only
     mask_overlap: float = 0.0         # ... of which hidden under device
     model_time: float = 0.0
@@ -194,6 +199,7 @@ class Session:
             mask_cache_hits=getattr(self.checker, "n_mask_memo_hits", 0),
             n_preemptions=self.n_preempt,
             n_device_tokens=self.n_device_tokens,
+            n_replayed_tokens=self.n_replayed,
             model_time_s=self.model_time,
             wall_time_s=self.t_finish - self.t_submit,
             finished=self.finished_eos,

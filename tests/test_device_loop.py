@@ -14,8 +14,18 @@ host path raises, while batch-mates finish ``ok``; (6) the device sampler
 matches host ``select_token`` in distribution; (7) the speculative verify
 path never widens packed masks to bool (runtime check backing the
 hot-path linter).
+ISSUE 9 adds the durability/degradation satellites: corrupted device
+table rows (real bit flips and the ``table_corrupt`` injection site) are
+caught by the block-boundary audit and demote the row with a journaled
+reason; a ``device_error`` mid-block discards the block wholesale and
+recovers bitwise-identically; a ``device_timeout`` storm walks the
+fused->host ladder down and back; the deadline clamp bounds a fused
+block to the nearest resident deadline; and a cancel that lands while a
+block is in flight is honored at the block boundary without committing
+the block's tokens.
 """
 import dataclasses
+import time
 
 import jax
 import numpy as np
@@ -29,8 +39,9 @@ from repro.core.sampling import GrammarSampler
 from repro.kernels.masked_sample.ops import masked_sample_packed
 from repro.models import build_model
 from repro.serving import (ConstraintSpec, ContinuousBatchingScheduler,
-                           DecodeParams, EngineConfig, Request,
-                           ServingEngine)
+                           DecodeParams, DegradationSupervisor,
+                           EngineConfig, Request, ServingEngine,
+                           TokenJournal, read_records)
 from repro.serving.faults import FaultInjector
 from repro.serving.request import select_token
 from repro.tokenizer import train_bpe
@@ -258,6 +269,196 @@ def test_device_sampler_matches_host_distribution():
         jax.numpy.zeros((1,), np.float32), jax.numpy.asarray(keys[:1])))
     masked = np.where(legal, logits, -np.inf)
     assert int(greedy[0]) == int(masked.argmax())
+
+
+# -- durability + degradation satellites (ISSUE 9) -----------------------------
+
+
+def _host_baseline(eng, prompts):
+    sched = ContinuousBatchingScheduler(eng, capacity=2)
+    sessions = [sched.submit(p) for p in prompts]
+    sched.run()
+    return [s.result for s in sessions]
+
+
+def test_corrupted_table_row_caught_by_audit_and_journaled(
+        engine, json_grammar, tmp_path):
+    """Flip bits in every HOST-side audit mask row except the entry
+    state: rows enter the fused path (the device-side tables are
+    untouched, so selection stays correct), and the first block-boundary
+    audit sees the corruption, demotes the row to the host path with a
+    journaled reason — output still bitwise-identical."""
+    eng = engine
+    base = _host_baseline(eng, PROMPTS[:2])
+    path = str(tmp_path / "j")
+    sched = ContinuousBatchingScheduler(eng, capacity=2, device_loop=True,
+                                        sync_n=4, debug_invariants=True,
+                                        journal=TokenJournal(path))
+    dts = sched._dts
+    d = DominoDecoder(json_grammar, list(eng.tok.vocab), eng.tok.eos_id)
+    root = dts.sid_for("default", d)
+    assert root >= 0
+    save = dts.mask_host.copy()
+    dts.mask_host[np.arange(len(dts.mask_host)) != root] ^= np.uint32(1)
+    try:
+        for p in PROMPTS[:2]:
+            sched.submit(p)
+        res = sched.run()
+    finally:
+        dts.mask_host[:] = save
+    assert sched.n_quotient_escapes >= 1
+    assert sched.n_device_tokens > 0          # the block DID run fused
+    for b, r in zip(base, res):
+        assert r.status == "ok"
+        assert r.token_ids == b.token_ids
+    demotes = [r for r in read_records(path) if r["kind"] == "demote"]
+    assert demotes and all("mismatch" in r["reason"] for r in demotes)
+
+
+def test_table_corrupt_injection_demotes_with_journal_reason(
+        engine, tmp_path):
+    eng = engine
+    base = _host_baseline(eng, PROMPTS[:2])
+    inj = FaultInjector(seed=0, rates={"table_corrupt": 1.0},
+                        max_faults=2)
+    path = str(tmp_path / "j")
+    sched = ContinuousBatchingScheduler(eng, capacity=2, device_loop=True,
+                                        sync_n=4, fault_injector=inj,
+                                        debug_invariants=True,
+                                        journal=TokenJournal(path))
+    for p in PROMPTS[:2]:
+        sched.submit(p)
+    res = sched.run()
+    assert inj.n_fired("table_corrupt") >= 1
+    assert sched.n_quotient_escapes >= 1
+    for b, r in zip(base, res):
+        assert r.status == "ok" and r.token_ids == b.token_ids
+    demotes = [r for r in read_records(path) if r["kind"] == "demote"]
+    assert any("injected table corruption" in r["reason"]
+               for r in demotes)
+
+
+def test_device_error_mid_block_discards_block_and_recovers(engine):
+    """An injected device_error at the fused-block readback: nothing
+    from the block can be trusted, so it is discarded wholesale (engine
+    reset + recompute-preempt) — the validated prefix survives and every
+    request completes bitwise-identical to the fault-free run."""
+    eng = engine
+    base = _host_baseline(eng, PROMPTS[:2])
+    inj = FaultInjector(seed=0, rates={"device_error": 1.0}, max_faults=1)
+    sched = ContinuousBatchingScheduler(eng, capacity=2, device_loop=True,
+                                        sync_n=8, fault_injector=inj,
+                                        debug_invariants=True)
+    for p in PROMPTS[:2]:
+        sched.submit(p)
+    res = sched.run()
+    assert inj.n_fired("device_error") == 1
+    assert sched.n_engine_resets == 1
+    assert sched.sup.n_degrades >= 1
+    for b, r in zip(base, res):
+        assert r.status == "ok"
+        assert r.token_ids == b.token_ids
+    assert all(s is None for s in sched.slots)
+    if sched.paged:
+        assert sched.pool.available == sched.n_pages - 1
+
+
+def test_device_timeout_storm_walks_ladder_down_and_back(engine):
+    """The acceptance storm: seeded device_timeout faults degrade the
+    fused loop to the host path; clean ticks climb back; MTTR is
+    recorded; no invariant violations, no leaks, outputs bitwise-equal,
+    and the fused path is re-entered after recovery."""
+    eng = engine
+    base = _host_baseline(eng, PROMPTS)
+    inj = FaultInjector(seed=1, rates={"device_timeout": 1.0},
+                        max_faults=6)
+    sup = DegradationSupervisor(max_retries=1, backoff_s=0.0,
+                                recover_after=2)
+    sched = ContinuousBatchingScheduler(eng, capacity=2, device_loop=True,
+                                        sync_n=4, fault_injector=inj,
+                                        supervisor=sup,
+                                        debug_invariants=True)
+    for p in PROMPTS:
+        sched.submit(p)
+    res = sched.run()
+    assert inj.n_fired("device_timeout") >= 2
+    assert sup.n_degrades >= 1
+    assert sup.n_recovers >= 1
+    for b, r in zip(base, res):
+        assert r.status == "ok"
+        assert r.token_ids == b.token_ids
+    # the storm exhausted early in the run; the ladder climbed back to
+    # the fused path and committed device tokens again
+    assert sup.level == 0 and sup.mttr_s is not None
+    assert sched.n_device_tokens > 0
+    assert all(s is None for s in sched.slots)
+    if sched.paged:
+        assert sched.pool.available == sched.n_pages - 1
+    stats = sched.stats()
+    assert stats["mttr_s"] == sup.mttr_s
+    assert stats["n_degrades"] == sup.n_degrades
+
+
+def test_deadline_clamp_bounds_fused_block(engine):
+    """Satellite: a resident with little deadline budget left must not
+    get a full sync_n block — the EWMA-priced clamp stops the block
+    early (>= 1 step so lifecycle checks still run at a boundary)."""
+    eng = engine
+    sched = ContinuousBatchingScheduler(eng, capacity=1, device_loop=True,
+                                        sync_n=8, debug_invariants=True)
+    s = sched.submit(Request(
+        PROMPTS[1], ConstraintSpec(grammar="default", mode="domino"),
+        DecodeParams(max_tokens=64, deadline_s=30.0)))
+    # run until the EWMA is primed by a full block
+    for _ in range(8):
+        if sched._tok_s_ema > 0.0 or s.result is not None:
+            break
+        sched.step()
+    assert s.result is None and sched._tok_s_ema > 0.0
+    assert sched.n_deadline_clamps == 0       # plenty of budget so far
+    # back-date the submission so ~10ms of deadline remains: the next
+    # block must clamp well below sync_n
+    s.t_submit = time.perf_counter() - (30.0 - 0.01)
+    sched.step()
+    assert sched.n_deadline_clamps >= 1
+    assert 1 <= sched._last_block_steps < 8
+    sched.run()                               # overdue: reaped next tick
+    assert s.result.status == "deadline_exceeded"
+    assert all(x is None for x in sched.slots)
+    if sched.paged:
+        assert sched.pool.available == sched.n_pages - 1
+
+
+def test_cancel_honored_at_block_boundary(engine):
+    """Satellite: a cancel that lands while a fused block is in flight
+    commits NONE of that block's tokens for the row and terminates it
+    `cancelled` at the next boundary — a cancel never trails by more
+    than one block."""
+    eng = engine
+    sched = ContinuousBatchingScheduler(eng, capacity=1, device_loop=True,
+                                        sync_n=4, debug_invariants=True)
+    s = sched.submit(Request(
+        PROMPTS[1], ConstraintSpec(grammar="default", mode="domino"),
+        DecodeParams(max_tokens=64)))
+    for _ in range(8):
+        if s.n_device_tokens > 0 or s.result is not None:
+            break
+        sched.step()
+    assert s.result is None and s.n_device_tokens > 0
+    n_before = len(s.out_ids)
+    # cancellation "arrives" while the next block is in flight: set the
+    # flag and drive the block directly (bypassing the tick's reap sweep,
+    # which would otherwise terminate the row before the block runs)
+    s.cancel_requested = True
+    sched._device_step()
+    assert len(s.out_ids) == n_before         # block tokens NOT committed
+    assert s.result is None
+    sched.step()                              # boundary: reap honors it
+    assert s.result.status == "cancelled"
+    assert s.result.n_tokens == n_before
+    assert all(x is None for x in sched.slots)
+    if sched.paged:
+        assert sched.pool.available == sched.n_pages - 1
 
 
 def test_verify_row_stays_packed(engine, monkeypatch):

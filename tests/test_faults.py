@@ -25,9 +25,10 @@ import pytest
 from repro.configs.base import ModelConfig
 from repro.core import grammars
 from repro.serving import (ConstraintSpec, ContinuousBatchingScheduler,
-                           DecodeParams, EngineConfig, FaultInjector,
-                           Request, ServingEngine, check_invariants)
-from repro.serving.faults import FaultRecord, InvariantViolation
+                           DecodeParams, DegradationSupervisor,
+                           EngineConfig, FaultInjector, Request,
+                           ServingEngine, check_invariants)
+from repro.serving.faults import SITES, FaultRecord, InvariantViolation
 from repro.models import build_model
 
 BASE = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
@@ -419,6 +420,153 @@ def test_chaos_storm_no_leaks_affected_fail_unaffected_bitwise(
     assert sum(sched.status_counts.values()) == len(PROMPTS)
     assert sched.status_counts["ok"] == \
         len([s for s in sess if s.result.ok])
+
+
+# -- degradation supervisor (ISSUE 9) ------------------------------------------
+
+
+def test_durability_fault_sites_registered():
+    for site in ("device_timeout", "device_error", "alloc_fail",
+                 "table_corrupt", "journal_torn_write", "crash_point"):
+        assert site in SITES
+        FaultInjector(rates={site: 1.0})   # constructor validates names
+
+
+def test_supervisor_guard_retries_with_exponential_backoff():
+    sleeps = []
+    sup = DegradationSupervisor(max_retries=2, backoff_s=0.01,
+                                clock=lambda: 0.0, sleep=sleeps.append)
+    failures = [RuntimeError("one"), RuntimeError("two")]
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if failures:
+            raise failures.pop(0)
+        return 42
+
+    ok, value = sup.guard("op", flaky)
+    assert ok and value == 42
+    assert len(calls) == 3 and sup.n_retries == 2
+    assert sleeps == [0.01, 0.02]          # 2^(attempt-1) backoff
+
+    def hopeless():
+        raise RuntimeError("always")
+
+    sup2 = DegradationSupervisor(max_retries=1, backoff_s=0.0,
+                                 sleep=lambda s: None)
+    ok, err = sup2.guard("op", hopeless)
+    assert not ok and isinstance(err, RuntimeError)
+    assert sup2.n_retries == 1
+
+
+def test_supervisor_guard_consults_injection_before_each_attempt():
+    fires = [True, True, False]
+    sup = DegradationSupervisor(max_retries=2, backoff_s=0.0,
+                                sleep=lambda s: None)
+    ok, value = sup.guard("op", lambda: 7, inject=lambda: fires.pop(0))
+    assert ok and value == 7
+    assert sup.n_retries == 2 and not fires
+
+
+def test_supervisor_watchdog_trip_keeps_the_value():
+    t = [0.0]
+
+    def clock():
+        t[0] += 1.0                        # every clock() call = +1s
+        return t[0]
+
+    sup = DegradationSupervisor(watchdog_s=0.5, clock=clock,
+                                sleep=lambda s: None)
+    ok, value = sup.guard("slow-op", lambda: "result")
+    assert ok and value == "result"        # finished, just slowly
+    assert sup.n_watchdog_trips == 1
+
+
+def test_supervisor_ladder_degrade_recover_and_mttr():
+    t = [0.0]
+    sup = DegradationSupervisor(recover_after=2, clock=lambda: t[0],
+                                sleep=lambda s: None)
+    assert sup.level == 0 and sup.level_name == "fused"
+    t[0] = 1.0
+    assert sup.degrade("device_timeout") == 1
+    sup.tick_ok()                          # dirty tick: does NOT count
+    assert sup.level == 1
+    assert sup.degrade("fused_block") == 2
+    assert sup.degrade("again") == 2       # capped at dense
+    assert sup.n_degrades == 2 and sup.level_name == "dense"
+    sup.tick_ok()                          # dirty reset
+    for _ in range(2):
+        sup.tick_ok()
+    assert sup.level == 1                  # 2 clean ticks -> one climb
+    t[0] = 9.0                             # clock at the final climb
+    for _ in range(2):
+        sup.tick_ok()
+    assert sup.level == 0 and sup.n_recovers == 2
+    assert sup.mttr_s == pytest.approx(8.0)   # first degrade -> level 0
+    s = sup.stats()
+    assert s["level"] == 0 and s["n_degrades"] == 2
+    assert s["mttr_s"] == pytest.approx(8.0)
+
+
+def test_alloc_fail_shrinks_capacity_outputs_invariant(
+        attn, small_tokenizer, json_grammar):
+    """Injected allocation failure is PRESSURE, not a row fault: the
+    supervisor shrinks effective capacity and preempts-to-queue, clean
+    ticks grow it back, and every output stays bitwise-identical."""
+    eng = _engine(attn, small_tokenizer, json_grammar)
+    base = ContinuousBatchingScheduler(eng, capacity=3, paged=True,
+                                      page_size=16, n_pages=12)
+    base_sess = [base.submit(p) for p in PROMPTS]
+    base.run()
+    # page_size=4 forces page-boundary crossings every few tokens, so the
+    # alloc_fail site (consulted only under a real shortfall) is hit
+    inj = FaultInjector(seed=5, rates={"alloc_fail": 1.0}, max_faults=2)
+    sched = ContinuousBatchingScheduler(eng, capacity=3, paged=True,
+                                       page_size=4, n_pages=40,
+                                       fault_injector=inj,
+                                       debug_invariants=True)
+    sess = [sched.submit(p) for p in PROMPTS]
+    sched.run()
+    assert inj.n_fired("alloc_fail") > 0
+    assert sched.n_capacity_shrinks > 0
+    assert sched.stats()["n_capacity_shrinks"] == sched.n_capacity_shrinks
+    for b, f in zip(base_sess, sess):
+        assert f.result.status == "ok"
+        assert f.result.token_ids == b.result.token_ids
+    assert sched.pool.available == sched.n_pages - 1
+    # clean ticks after the storm regrew the admission cap
+    assert 1 <= sched._cap_eff <= sched.capacity
+
+
+def test_device_error_storm_resets_engine_outputs_exact(
+        attn, small_tokenizer, json_grammar):
+    """A device_error storm on the host tick path: the guarded readback
+    retries, then resets the engine surface (recompute-preempt all) and
+    steps down the ladder.  Preemption invariance keeps every completed
+    request bitwise-identical to the fault-free run."""
+    eng = _engine(attn, small_tokenizer, json_grammar)
+    base = ContinuousBatchingScheduler(eng, capacity=2)
+    base_sess = [base.submit(p) for p in PROMPTS[:4]]
+    base.run()
+    inj = FaultInjector(seed=2, rates={"device_error": 1.0}, max_faults=8)
+    sched = ContinuousBatchingScheduler(eng, capacity=2,
+                                       fault_injector=inj,
+                                       debug_invariants=True)
+    sess = [sched.submit(p) for p in PROMPTS[:4]]
+    sched.run()
+    assert inj.n_fired("device_error") == 8
+    assert sched.n_engine_resets >= 1
+    assert sched.sup.n_degrades >= 1
+    for b, f in zip(base_sess, sess):
+        assert f.result.status == "ok"
+        assert f.result.token_ids == b.result.token_ids
+    if sched.paged:
+        assert sched.pool.available == sched.n_pages - 1
+    assert all(s is None for s in sched.slots)
+    stats = sched.stats()
+    assert stats["n_engine_resets"] == sched.n_engine_resets
+    assert stats["level_name"] in ("fused", "host", "dense")
 
 
 # -- lint: no swallowed exceptions in serving/ ---------------------------------

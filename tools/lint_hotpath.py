@@ -27,7 +27,13 @@ Rules (AST-based, stdlib only):
       hides a failure that the fault-tolerance layer (PR 7) must map to
       an explicit per-request terminal status (``internal_error``,
       ``rejected``, ...) — silent constraint-engine failures corrupt
-      downstream results without a trace.
+      downstream results without a trace;
+  R5  no file-sync calls (``fsync``/``flush``/``commit_tick``/``sync``)
+      inside the tick-path functions: the crash journal (PR 9) buffers
+      during tick phases and does ALL its file I/O in ``_journal_tick``
+      at the tick boundary — an fsync on the per-token path serializes
+      decode on disk latency, which is exactly the overhead the batched
+      write-ahead design exists to avoid.
 
 A finding is suppressed by putting ``# hotpath-lint: allow`` on the
 offending physical line (or the line above it).  Every suppression is a
@@ -60,9 +66,15 @@ TICK_FUNCS: Set[str] = {
     # once, at trace time, not per tick)
     "_device_step", "_resync_row", "_sid_for", "_device_ready",
     "_advance_sid", "_audit_sid",
+    # durability (PR 9): these run inside tick phases and may only
+    # BUFFER journal records — _journal_tick (the designed tick-boundary
+    # flush point) is deliberately NOT in this set
+    "_journal_submit", "_journal_commit", "_deadline_cap",
 }
 
 ALLOC_FUNCS = {"zeros", "ones", "empty", "full", "tile"}
+# R5: journal/file-sync entry points banned from tick-path functions
+SYNC_BANNED = {"fsync", "flush", "commit_tick", "sync"}
 CLOCK_BANNED = {("time", "time"), ("datetime", "now"),
                 ("datetime", "utcnow"), ("datetime", "today")}
 RANDOM_FUNCS = {"random", "randint", "choice", "choices", "shuffle",
@@ -132,6 +144,13 @@ def _check_hot_scope(tree_nodes, path: str, lines: List[str],
                 f"unpack(...) call in {where} — packed masks must reach "
                 f"the fused kernel packed; unpacking on the host "
                 f"re-creates the dense (B, V) traffic PR 4 removed"))
+        if name in SYNC_BANNED:
+            out.append(Finding(
+                path, node.lineno, "R5",
+                f"file-sync call {name}(...) in {where} — journal I/O "
+                f"must batch at the tick boundary (_journal_tick); an "
+                f"fsync/flush on the per-token path serializes decode "
+                f"on disk latency"))
     return out
 
 
