@@ -271,6 +271,137 @@ def _drive_loop(eng: ServingEngine, device_loop: bool, label: str,
     return rec
 
 
+# radix prefix cache (ISSUE 10): Zipf-shared-preamble traffic — the
+# shape structured-output deployments actually have (few long system
+# prompts, many short user suffixes) — cold vs warm at the SAME page
+# pool size, so the tok/s delta is prefill compute the cache skipped,
+# not extra HBM
+PFX_N_REQUESTS = 16
+PFX_MAX_TOKENS = 4               # prefill-dominated: the cache's target
+PFX_PAGE_SIZE = 16
+PFX_N_PAGES = 160
+PFX_REPS = 3                     # interleaved min-of-N timing
+PFX_PREAMBLES = [
+    "You are a strict data formatter; always answer with one value and "
+    "nothing else. The schema below is authoritative and versioned. " * 2,
+    "System: the following conversation extracts configuration records "
+    "from logs; keep keys stable across turns and quote every string. ",
+    "Common few-shot preamble: {\"a\": 1} {\"b\": [2, 3]} now continue "
+    "in exactly the same style for the next record. ",
+]
+
+
+def _prefix_trace():
+    """Zipf-weighted choice over a few long preambles + a unique short
+    suffix per request: most requests share the hottest preamble."""
+    rng = np.random.default_rng(TRACE_SEED)
+    picks = np.minimum(rng.zipf(ZIPF_A, size=PFX_N_REQUESTS),
+                       len(PFX_PREAMBLES)) - 1
+    specs = [ConstraintSpec(grammar="json", mode="domino"),
+             ConstraintSpec(grammar="c", mode="domino"),
+             ConstraintSpec()]
+    return [Request(PFX_PREAMBLES[picks[i]] + f"q{i}: ",
+                    specs[i % len(specs)],
+                    DecodeParams(max_tokens=PFX_MAX_TOKENS, seed=i))
+            for i in range(PFX_N_REQUESTS)]
+
+
+def _memo_hits(eng: ServingEngine) -> int:
+    return sum(tc.n_memo_hits for _, tc in eng.registry.values()
+               if tc is not None)
+
+
+def _shareable_tokens(sessions) -> int:
+    """Upper bound the cache can skip: per request, the longest common
+    token prefix with ANY earlier request, floored to whole pages."""
+    ids = [s.prompt_ids for s in sessions]
+    total = 0
+    for i in range(1, len(ids)):
+        best = 0
+        for j in range(i):
+            n = 0
+            for a, b in zip(ids[i], ids[j]):
+                if a != b:
+                    break
+                n += 1
+            best = max(best, n)
+        total += (best // PFX_PAGE_SIZE) * PFX_PAGE_SIZE
+    return total
+
+
+def _drive_prefix(eng: ServingEngine, verbose=True):
+    """Cold vs warm prefix-cache pass over the identical Zipf trace at an
+    equal HBM budget (same pool).  Acceptance: bitwise-identical token
+    ids, >= 90% of shareable prefill tokens skipped, and a tok/s gain."""
+
+    def one(prefix_cache: bool, timed: bool):
+        sched = ContinuousBatchingScheduler(
+            eng, capacity=CAPACITY, page_size=PFX_PAGE_SIZE,
+            n_pages=PFX_N_PAGES, prefix_cache=prefix_cache,
+            debug_invariants=True)
+        sessions = [sched.submit(r) for r in _prefix_trace()]
+        t0 = time.perf_counter()
+        sched.run()
+        wall = time.perf_counter() - t0
+        return sched, sessions, wall
+
+    one(False, timed=False)            # compile the PFX-shape cold
+    one(True, timed=False)             # buckets and the cached tails
+    _, cold_sess, cold_wall = one(False, timed=True)
+    memo0 = _memo_hits(eng)
+    warm_sched, warm_sess, warm_wall = one(True, timed=True)
+    mask_builds_skipped = _memo_hits(eng) - memo0
+    # interleaved min-of-N per mode: wall-clock noise, not prefill
+    # compute, is the only thing further repetitions can change
+    for _ in range(PFX_REPS - 1):
+        cold_wall = min(cold_wall, one(False, timed=True)[2])
+        warm_wall = min(warm_wall, one(True, timed=True)[2])
+
+    for c, w in zip(cold_sess, warm_sess):
+        assert w.result.token_ids == c.result.token_ids, \
+            f"prefix cache changed rid {c.rid} output"
+        assert w.result.status == c.result.status == "ok"
+    shareable = _shareable_tokens(cold_sess)
+    skipped = warm_sched.n_prefix_tokens
+    assert skipped >= 0.9 * shareable, \
+        f"skipped {skipped} of {shareable} shareable prefill tokens"
+    # leak-free drain at both ends of the cache's lifetime
+    held = warm_sched.prefix_cache.n_pages
+    assert warm_sched.pool.available == PFX_N_PAGES - 1 - held
+    warm_sched.prefix_cache.reset()
+    assert warm_sched.pool.available == PFX_N_PAGES - 1, "page leak"
+
+    n_tok = sum(s.result.n_tokens for s in warm_sess)
+    cold_tok_s = n_tok / cold_wall
+    warm_tok_s = n_tok / warm_wall
+    speedup = warm_tok_s / cold_tok_s
+    assert speedup > 1.0, \
+        f"warm pass not faster: {warm_tok_s:.1f} vs {cold_tok_s:.1f} tok/s"
+    rec = {
+        "label": "prefix_zipf",
+        "n_requests": PFX_N_REQUESTS,
+        "n_tokens": n_tok,
+        "tok_per_s": warm_tok_s,
+        "cold_tok_per_s": cold_tok_s,
+        "prefix_speedup": speedup,
+        "prefix_hit_rate":
+            warm_sched.n_prefix_hits / PFX_N_REQUESTS,
+        "prefill_tokens_skipped": skipped,
+        "shareable_tokens": shareable,
+        "mask_builds_skipped": mask_builds_skipped,
+        "n_evicted": warm_sched.stats()["prefix_n_evicted"],
+    }
+    if verbose:
+        print(f"  [serving/prefix_zipf] {skipped}/{shareable} shareable "
+              f"prefill tokens skipped "
+              f"({warm_sched.n_prefix_hits}/{PFX_N_REQUESTS} hits), "
+              f"{warm_tok_s:.1f} vs {cold_tok_s:.1f} tok/s cold "
+              f"({speedup:.2f}x)", flush=True)
+    emit("serving_prefix_zipf_tok_per_s", 1e6 / max(warm_tok_s, 1e-9),
+         f"{warm_tok_s:.1f} tok/s")
+    return rec
+
+
 class _Crash(Exception):
     """In-process stand-in for SIGKILL in the recovery drill."""
 
@@ -380,7 +511,9 @@ def _append_history(rows, path=HISTORY_PATH):
             "host_syncs_per_token", "n_tokens", "n_device_tokens",
             "n_quotient_escapes", "n_table_rejects", "mttr_s",
             "n_replayed_tokens", "n_degrades", "n_recovers",
-            "prompt_chars_p50", "prompt_chars_max")
+            "prompt_chars_p50", "prompt_chars_max",
+            "cold_tok_per_s", "prefix_speedup", "prefix_hit_rate",
+            "prefill_tokens_skipped", "mask_builds_skipped")
     with open(path, "a") as f:
         for row in rows:
             slim = {k: row[k] for k in keep if k in row}
@@ -408,6 +541,9 @@ def run(verbose: bool = True, json_path: str = "BENCH_serving.json"):
                      trace=_make_trace(), verbose=verbose)
     fault_free.pop("_token_ids")
     faulted.pop("_token_ids")
+
+    # radix prefix cache over Zipf-shared preambles (ISSUE 10)
+    prefix_zipf = _drive_prefix(eng, verbose=verbose)
 
     # device-resident fused loop vs per-token host loop (ISSUE 8)
     eng_dev = _setup_certified()
@@ -437,7 +573,10 @@ def run(verbose: bool = True, json_path: str = "BENCH_serving.json"):
                    "grammars": ["json", "c", "unconstrained"],
                    "sync_n": SYNC_N,
                    "dev_n_requests": DEV_N_REQUESTS,
-                   "dev_max_tokens": DEV_MAX_TOKENS},
+                   "dev_max_tokens": DEV_MAX_TOKENS,
+                   "pfx_n_requests": PFX_N_REQUESTS,
+                   "pfx_page_size": PFX_PAGE_SIZE,
+                   "pfx_n_pages": PFX_N_PAGES},
         "fault_free": fault_free,
         "traffic_replay_identical": True,     # asserted above
         "faulted": faulted,
@@ -445,11 +584,12 @@ def run(verbose: bool = True, json_path: str = "BENCH_serving.json"):
         "device_loop": device_loop,
         "device_speedup": speedup,
         "faulted_recovered": recovered,
+        "prefix_zipf": prefix_zipf,
     }
     pathlib.Path(json_path).write_text(json.dumps(record, indent=2))
     _append_history([{**fault_free, "label": "fault_free"},
                      {**faulted, "label": "faulted"},
-                     host_loop, device_loop, recovered])
+                     host_loop, device_loop, recovered, prefix_zipf])
     if verbose:
         print(f"  [serving] wrote {json_path} and appended "
               f"{HISTORY_PATH.name}", flush=True)

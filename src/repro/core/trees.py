@@ -164,6 +164,10 @@ class TreeCache:
         self.mask_memo: "collections.OrderedDict[object, np.ndarray]" = \
             collections.OrderedDict()
         self.mask_memo_max = 4096
+        # aggregate memo hits across EVERY decoder sharing this cache —
+        # the cross-session mask-sharing signal (per-decoder counts live
+        # on DominoDecoder.n_mask_memo_hits and die with the session)
+        self.n_memo_hits = 0
         # device-resident decode table for this grammar (attached by
         # ServingEngine.build_device_tables when the closure certificate
         # is clean): a repro.core.analysis.DeviceGrammarTable, or None.

@@ -55,6 +55,12 @@ def main() -> None:
                     help="bound the scheduler's waiting queue: overflow "
                          "submissions are shed immediately with status "
                          "rejected (default: unbounded)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prefix cache over the paged KV pool: "
+                         "admissions sharing a token prefix block-map "
+                         "the cached pages copy-on-write and prefill "
+                         "only the tail (outputs bitwise-identical to a "
+                         "cold cache); requires paged KV")
     ap.add_argument("--device-tables", action="store_true",
                     help="build device grammar tables at precompute for "
                          "every registered grammar that certifies clean "
@@ -177,7 +183,8 @@ def main() -> None:
             args.journal, max_batch=args.slots, journal=journal,
             paged=False if args.no_paged else None,
             page_size=args.page_size, n_pages=args.pool_pages,
-            device_loop=args.device_loop, sync_n=args.sync_n)
+            device_loop=args.device_loop, sync_n=args.sync_n,
+            prefix_cache=args.prefix_cache)
         n_live = len(sched.waiting)
         results = sched.run()
         print(f"[restore] {args.journal}: {len(results)} journaled "
@@ -233,7 +240,7 @@ def main() -> None:
             page_size=args.page_size, n_pages=args.pool_pages,
             queue_limit=args.queue_limit,
             device_loop=args.device_loop, sync_n=args.sync_n,
-            journal=journal)
+            journal=journal, prefix_cache=args.prefix_cache)
     else:
         results = [engine.generate(r) for r in requests]
     for lbl, req, r in zip(labels, requests, results):

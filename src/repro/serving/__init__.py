@@ -3,6 +3,7 @@ from repro.serving.faults import (FaultInjector, InjectedFault,
                                   InvariantViolation, check_invariants)
 from repro.serving.journal import (JournalEntry, TokenJournal, read_records,
                                    replay_journal)
+from repro.serving.prefix_cache import PrefixCache, RadixNode
 from repro.serving.request import ConstraintSpec, DecodeParams, Request
 from repro.serving.scheduler import ContinuousBatchingScheduler
 from repro.serving.session import GenerationResult, Session
@@ -13,4 +14,4 @@ __all__ = ["ServingEngine", "EngineConfig", "GenerationResult", "Session",
            "Request", "FaultInjector", "InjectedFault",
            "InvariantViolation", "check_invariants", "TokenJournal",
            "JournalEntry", "read_records", "replay_journal",
-           "DegradationSupervisor"]
+           "DegradationSupervisor", "PrefixCache", "RadixNode"]

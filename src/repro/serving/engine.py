@@ -258,6 +258,11 @@ class ServingEngine:
         self.count_model = count_model or CountModel()
         self._speculators: Dict[Tuple[int, float], Speculator] = {}
         self.speculator = self._speculator_for(self.default_decode)
+        # engine-default prompts (system preambles / few-shot headers)
+        # registered via pin_prompt(): a prefix-cache-enabled scheduler
+        # prefills and PINS their full KV pages at warm() time, so the
+        # very first live request sharing the preamble already hits
+        self.pinned_prompts: List[str] = []
         # engine-level rng: used only by the template baseline (which has
         # no Request); request sampling is per-session
         self.rng = np.random.default_rng(self.cfg.seed)
@@ -422,6 +427,15 @@ class ServingEngine:
         if self.enable_device_tables:
             out["device_table_seconds"] = self.build_device_tables()
         return out
+
+    def pin_prompt(self, prompt: str) -> None:
+        """Register an engine-default prompt (shared system preamble /
+        few-shot header) for prefix pinning: a prefix-cache-enabled
+        scheduler's ``warm()`` prefills its whole-page prefix once and
+        pins the pages against eviction.  A no-op for schedulers without
+        ``prefix_cache=True``."""
+        if prompt not in self.pinned_prompts:
+            self.pinned_prompts.append(prompt)
 
     def build_device_tables(self) -> float:
         """Build + upload a :class:`DeviceGrammarTable` for every
@@ -850,7 +864,8 @@ class ServingEngine:
                        device_loop: bool = False,
                        sync_n: int = 8,
                        journal=None,
-                       supervisor=None
+                       supervisor=None,
+                       prefix_cache: bool = False
                        ) -> List[GenerationResult]:
         """Serve ``requests`` (Requests or bare prompt strings) through
         the continuous-batching scheduler.  Rows may mix grammars,
@@ -888,6 +903,12 @@ class ServingEngine:
         WAL — see :meth:`restore`); ``supervisor`` a
         :class:`~repro.serving.supervisor.DegradationSupervisor`
         (watchdogs + the fused->host->dense degradation ladder).
+
+        ``prefix_cache=True`` (paged only) shares whole KV pages across
+        requests with identical token prefixes through a radix tree with
+        copy-on-write refcounting — admissions skip prefill for the
+        cached prefix and re-prefill only the tail (observationally
+        pure: outputs are bitwise-identical to a cold cache).
         """
         from repro.serving.scheduler import ContinuousBatchingScheduler
         cap = min(len(requests), max_batch) if max_batch else len(requests)
@@ -905,7 +926,12 @@ class ServingEngine:
             fault_injector=fault_injector,
             debug_invariants=debug_invariants,
             device_loop=device_loop, sync_n=sync_n,
-            journal=journal, supervisor=supervisor, **kwargs)
+            journal=journal, supervisor=supervisor,
+            prefix_cache=prefix_cache, **kwargs)
+        if prefix_cache:
+            # install engine-default pinned prompts before admission
+            # (precompute() is the caller's job and may already be done)
+            sched._pin_prompts()
         sessions = [sched.submit(r) for r in requests]
         sched.run()
         return [s.result for s in sessions]

@@ -224,16 +224,48 @@ def check_invariants(sched) -> List[str]:
             problems.append(f"slot {i} block table has stale entries "
                             f"beyond its {n} allocated pages")
         allocated.extend(pages)
-    if len(set(allocated)) != len(allocated):
-        problems.append("a pool page is block-mapped by two rows")
+    cache = getattr(sched, "prefix_cache", None)
+    counts: Dict[int, int] = {}
+    for p in allocated:
+        counts[p] = counts.get(p, 0) + 1
+    if cache is None:
+        if len(set(allocated)) != len(allocated):
+            problems.append("a pool page is block-mapped by two rows")
+    else:
+        # COW partition audit: multi-mapping is legal ONLY for pages the
+        # radix tree owns (shared read-only prefixes)
+        for p, c in counts.items():
+            if c > 1 and not cache.owns(p):
+                problems.append(f"pool page {p} block-mapped by {c} rows "
+                                f"but not owned by the prefix cache")
     overlap = set(allocated) & set(free)
     if overlap:
         problems.append(f"pages {sorted(overlap)} both allocated and free")
+    cached_pages = set() if cache is None else set(cache.pages())
+    bad = cached_pages & set(free)
+    if bad:
+        problems.append(f"pages {sorted(bad)} owned by the prefix cache "
+                        f"AND on the free list")
     universe = set(range(1, sched.n_pages))
-    missing = universe - set(allocated) - set(free)
+    missing = universe - set(allocated) - set(free) - cached_pages
     if missing:
-        problems.append(f"page leak: {sorted(missing)} neither free nor "
-                        f"block-mapped by any resident row")
+        problems.append(f"page leak: {sorted(missing)} neither free, "
+                        f"cache-owned, nor block-mapped by any resident "
+                        f"row")
+    # refcount audit: every live page's count equals its block-table
+    # mappings plus its radix-node ownership (free pages count 0)
+    refcount = getattr(sched.pool, "refcount", None)
+    if refcount is not None:
+        free_set = set(free)
+        for p in universe:
+            expect = (0 if p in free_set
+                      else counts.get(p, 0) + (1 if p in cached_pages
+                                               else 0))
+            got = refcount(p)
+            if got != expect:
+                problems.append(f"page {p} refcount {got} != {expect} "
+                                f"(= {counts.get(p, 0)} table refs + "
+                                f"{int(p in cached_pages)} node refs)")
     lens = np.asarray(sched.cache["len"])
     for i, sess in enumerate(sched.slots):
         if sess is None:
@@ -242,4 +274,26 @@ def check_invariants(sched) -> List[str]:
         if int(lens[i]) > cap:
             problems.append(f"slot {i} cache length {int(lens[i])} "
                             f"exceeds its {cap}-token page allocation")
+    # write-barrier audit: a slot's shared (cached) pages must all be
+    # cache-owned and must sit strictly below its write frontier — no
+    # shared page is ever writable by a decode/rollback/refeed
+    shared = getattr(sched, "_n_shared_row", None)
+    if cache is not None and shared is not None:
+        for i, sess in enumerate(sched.slots):
+            ns = int(shared[i])
+            if sess is None:
+                if ns:
+                    problems.append(f"vacant slot {i} claims {ns} shared "
+                                    f"pages")
+                continue
+            for d in range(min(ns, int(sched._n_pages_row[i]))):
+                p = int(sched._page_tbl[i, d])
+                if not cache.owns(p):
+                    problems.append(f"slot {i} shared page {p} (depth "
+                                    f"{d}) is not cache-owned")
+            if int(lens[i]) < ns * sched.page_size:
+                problems.append(f"slot {i} frontier {int(lens[i])} is "
+                                f"inside its {ns}-page shared prefix — "
+                                f"a decode write could corrupt a shared "
+                                f"page")
     return problems

@@ -234,6 +234,14 @@ class JournalEntry:
     rng_state: Optional[Dict[str, Any]] = None
     n_preempts: int = 0
     n_demotes: int = 0
+    # prefix-cache adoption observability (admit records): cumulative
+    # cached pages block-mapped at this rid's admissions, and whether
+    # any admission ran with an adopt()-cloned checker snapshot.
+    # Informational only — replay correctness never depends on it
+    # (re-admission through the cache and a cold re-prefill are
+    # bitwise-identical by prefix determinism)
+    n_cached_pages: int = 0
+    cached_checker: bool = False
     terminal: Optional[Dict[str, Any]] = None
     recoverable: bool = True
     reason: Optional[str] = None
@@ -273,6 +281,10 @@ def replay_journal(path: str) -> Dict[int, JournalEntry]:
             e.n_draws = int(rec.get("n_draws", e.n_draws))
             if "rng" in rec:
                 e.rng_state = rec["rng"]
+        elif kind == "admit":
+            e.n_cached_pages += int(rec.get("cached_pages", 0))
+            e.cached_checker = (e.cached_checker
+                                or bool(rec.get("cached_checker", False)))
         elif kind == "preempt":
             e.n_preempts += 1
         elif kind == "demote":

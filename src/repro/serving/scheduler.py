@@ -125,6 +125,7 @@ from repro.models import kvcache
 from repro.serving.faults import (FaultInjector, InjectedFault,
                                   InvariantViolation, check_invariants)
 from repro.serving.journal import JournalEntry, TokenJournal
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.request import (ConstraintSpec, DecodeParams, Request,
                                    select_token)
 from repro.serving.session import GenerationResult, Session
@@ -142,11 +143,20 @@ class PagePool:
     pages 1..n_pages-1 are allocatable.  LIFO reuse: a freed page is the
     next one handed out, which keeps the hot pages hot and makes
     stale-read bugs surface immediately under test.
+
+    Pages carry refcounts so the prefix cache can share them: ``alloc``
+    hands out pages at refcount 1, ``retain`` adds a reference (a radix
+    node adopting the page, or a block table mapping a cached page) and
+    ``release``/``free`` drops one — the page returns to the free list
+    only when the LAST reference goes.  Exclusive ownership is the
+    refcount-1 special case, so every pre-cache call site keeps its exact
+    semantics.
     """
 
     def __init__(self, n_pages: int):
         self.n_pages = n_pages
         self._free: List[int] = list(range(1, n_pages))
+        self._ref = np.zeros(n_pages, np.int32)
 
     @property
     def available(self) -> int:
@@ -160,11 +170,32 @@ class PagePool:
         got = self._free[-n:][::-1] if n else []
         if n:
             del self._free[-n:]
+        for p in got:
+            self._ref[p] = 1
         return got
 
-    def free(self, pages) -> None:
-        self._free.extend(int(p) for p in pages)
+    def retain(self, pages) -> None:
+        """Add one reference to already-allocated pages."""
+        for p in pages:
+            p = int(p)
+            assert self._ref[p] > 0, f"retain of unallocated page {p}"
+            self._ref[p] += 1
+
+    def release(self, pages) -> None:
+        """Drop one reference per page; last reference frees the page."""
+        for p in pages:
+            p = int(p)
+            assert self._ref[p] > 0, f"release of unallocated page {p}"
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                self._free.append(p)
         assert len(self._free) <= self.n_pages - 1
+
+    # historical name: exclusive owners "free" their pages (refcount 1).
+    free = release
+
+    def refcount(self, page: int) -> int:
+        return int(self._ref[int(page)])
 
 
 # -- per-slot cache surgery ----------------------------------------------------
@@ -320,7 +351,8 @@ class ContinuousBatchingScheduler:
                  debug_invariants: bool = False,
                  device_loop: bool = False, sync_n: int = 8,
                  journal: Optional[TokenJournal] = None,
-                 supervisor: Optional[DegradationSupervisor] = None):
+                 supervisor: Optional[DegradationSupervisor] = None,
+                 prefix_cache: bool = False):
         self.eng = engine
         self.capacity = max(1, capacity)
         self.overlap = overlap
@@ -368,9 +400,25 @@ class ContinuousBatchingScheduler:
             self._scatter_paged = jax.jit(
                 functools.partial(_scatter_row_paged, page_size=ps),
                 donate_argnums=(0,))
+            # per-slot count of block-table entries that map CACHED
+            # (shared, read-only) pages — pages [0, n) of the row's
+            # table.  The write frontier always sits strictly above the
+            # shared region (lookup never matches the final page), so a
+            # decode/rollback/refeed write can never touch a shared page.
+            self._n_shared_row = np.zeros(self.capacity, np.int32)
         else:
             self.cache = engine.model.init_cache(self.capacity,
                                                  engine.max_len)
+        if prefix_cache and not self.paged:
+            raise ValueError("prefix_cache=True requires paged KV "
+                             "(pages are the sharing granularity)")
+        self.prefix_cache = (PrefixCache(self.pool, self.page_size)
+                             if prefix_cache else None)
+        self.n_prefix_hits = 0         # admissions served >= 1 cached page
+        self.n_prefix_tokens = 0       # prefill tokens skipped via cache
+        self.n_checker_clones = 0      # adopt() replays served by snapshot
+        self._in_reset = False         # engine reset in flight: cached
+        #                                pages are garbage, don't insert
         self.cache["len"] = jnp.zeros((self.capacity,), jnp.int32)  # ragged
         vpad = engine.model.padded_vocab
         self._logits = jnp.zeros((self.capacity, vpad), jnp.float32)
@@ -509,8 +557,49 @@ class ContinuousBatchingScheduler:
     def warm(self) -> Dict[str, float]:
         """Run the offline tree precomputation (paper Algorithm 2) over
         every grammar in the engine registry so mask construction never
-        lands on the serving critical path."""
-        return self.eng.precompute()
+        lands on the serving critical path, then prefill and PIN any
+        engine-default prompts into the prefix cache."""
+        stats = self.eng.precompute()
+        self._pin_prompts()
+        return stats
+
+    def _pin_prompts(self) -> None:
+        """Prefill each engine-registered default prompt once and park
+        its full pages as PINNED radix nodes (never evicted): every
+        future admission sharing the preamble skips its prefill."""
+        if self.prefix_cache is None:
+            return
+        eng = self.eng
+        for prompt in getattr(eng, "pinned_prompts", ()):
+            ids = eng.tok.encode(prompt)
+            n_full = len(ids) // self.page_size
+            if n_full == 0:
+                continue
+            cut = ids[:n_full * self.page_size]
+            probe = self.prefix_cache.lookup(cut, max_pages=n_full)
+            if probe:
+                self.pool.release(probe)     # drop the probe references
+                if len(probe) == n_full:
+                    continue                 # fully cached (re-warm)
+            pages = self._alloc_pages(n_full)
+            if pages is None:
+                break
+            row_cache = eng.model.init_cache(1, eng.max_len)
+            _, row_cache = eng._prefill(
+                eng.params, {"tokens": jnp.asarray([cut], jnp.int32)},
+                row_cache)
+            padded = np.zeros(self.max_pages, np.int32)
+            padded[:n_full] = pages
+            # slot 0 is scratch for the donating scatter; it must be
+            # vacant (warm before serving) — restore its len afterwards
+            assert self.slots[0] is None, "warm() after admission"
+            self.cache = self._scatter_paged(self.cache, row_cache, 0,
+                                             jnp.asarray(padded))
+            cache = dict(self.cache)
+            cache["len"] = cache["len"].at[0].set(0)
+            self.cache = cache
+            self.prefix_cache.insert(cut, pages, pin=True)
+            self.pool.release(pages)   # ownership passes to the nodes
 
     def submit(self, request: Union[str, Request],
                extra_inputs=None) -> Session:
@@ -568,7 +657,13 @@ class ContinuousBatchingScheduler:
             cap_eff=self._cap_eff,
             journal_syncs=(0 if self.journal is None
                            else self.journal.n_syncs),
+            n_prefix_hits=self.n_prefix_hits,
+            n_prefix_tokens=self.n_prefix_tokens,
+            n_checker_clones=self.n_checker_clones,
         )
+        if self.prefix_cache is not None:
+            s.update({"prefix_" + k: v
+                      for k, v in self.prefix_cache.stats().items()})
         return s
 
     def step(self) -> List[Session]:
@@ -692,6 +787,7 @@ class ContinuousBatchingScheduler:
                 self._finish(sess, status="rejected", error=reason)
                 continue
             page_ids = None
+            cached: List[int] = []
             if self.paged:
                 # +1: the first decode write must fit without a new
                 # allocation, or a lone just-admitted row could preempt
@@ -699,49 +795,81 @@ class ContinuousBatchingScheduler:
                 n_pg = _ceil_div(len(ids) + 1, self.page_size)
                 if self._inject("page_exhaustion", sess):
                     break      # injected dry pool: backpressure path
-                page_ids = self.pool.alloc(n_pg)
+                if self.prefix_cache is not None and not sess.extra_inputs:
+                    # longest shared whole-page prefix, capped one token
+                    # short of the sequence so the boundary page is
+                    # always private (COW write barrier by construction)
+                    cached = self.prefix_cache.lookup(
+                        ids, max_pages=(len(ids) - 1) // self.page_size)
+                page_ids = self._alloc_pages(n_pg - len(cached))
                 if page_ids is None:
+                    if cached:
+                        self.pool.release(cached)
                     break          # backpressure: wait for frees (FIFO)
+                page_ids = cached + page_ids
             self.waiting.popleft()
             self._premask.pop(slot, None)
             self._opp_intervened[slot] = False
-            row_cache = eng.model.init_cache(1, eng.max_len)
-            inputs = {"tokens": jnp.asarray([ids], jnp.int32)}
-            if self.bucket_prefill and not eng._needs_refeed \
-                    and not sess.extra_inputs:
-                # power-of-two bucket: pads ride beyond the valid frontier
-                # (masked by pos < len, overwritten by later decodes), the
-                # head reads the true last token.  Gated off refeed archs:
-                # ring/recurrent state would absorb the pads.
-                p = _bucket_len(len(ids), eng.max_len)
-                inputs["tokens"] = jnp.asarray(
-                    [ids + [eng.tok.pad_id] * (p - len(ids))], jnp.int32)
-                inputs["length"] = jnp.asarray(len(ids), jnp.int32)
-            if sess.extra_inputs:
-                inputs.update(sess.extra_inputs)
             t0 = time.perf_counter()
             try:
-                logits, row_cache = eng._prefill(eng.params, inputs,
-                                                 row_cache)
-                if self.paged:
-                    padded = np.zeros(self.max_pages, np.int32)
-                    padded[:len(page_ids)] = page_ids
-                    self.cache = self._scatter_paged(
-                        self.cache, row_cache, slot, jnp.asarray(padded))
-                    self._page_tbl[slot, :] = 0
-                    self._page_tbl[slot, :len(page_ids)] = page_ids
-                    self._n_pages_row[slot] = len(page_ids)
-                    self._pages_dirty = True
+                if cached:
+                    logits_row = self._cached_prefill(sess, slot, ids,
+                                                      page_ids,
+                                                      len(cached))
                 else:
-                    self.cache = _scatter_row_donate(self.cache,
-                                                     row_cache, slot)
+                    row_cache = eng.model.init_cache(1, eng.max_len)
+                    inputs = {"tokens": jnp.asarray([ids], jnp.int32)}
+                    if self.bucket_prefill and not eng._needs_refeed \
+                            and not sess.extra_inputs:
+                        # power-of-two bucket: pads ride beyond the valid
+                        # frontier (masked by pos < len, overwritten by
+                        # later decodes), the head reads the true last
+                        # token.  Gated off refeed archs: ring/recurrent
+                        # state would absorb the pads.
+                        p = _bucket_len(len(ids), eng.max_len)
+                        inputs["tokens"] = jnp.asarray(
+                            [ids + [eng.tok.pad_id] * (p - len(ids))],
+                            jnp.int32)
+                        inputs["length"] = jnp.asarray(len(ids), jnp.int32)
+                    if sess.extra_inputs:
+                        inputs.update(sess.extra_inputs)
+                    logits, row_cache = eng._prefill(eng.params, inputs,
+                                                     row_cache)
+                    logits_row = logits[0, -1]
+                    if self.paged:
+                        padded = np.zeros(self.max_pages, np.int32)
+                        padded[:len(page_ids)] = page_ids
+                        self.cache = self._scatter_paged(
+                            self.cache, row_cache, slot,
+                            jnp.asarray(padded))
+                        self._page_tbl[slot, :] = 0
+                        self._page_tbl[slot, :len(page_ids)] = page_ids
+                        self._n_pages_row[slot] = len(page_ids)
+                        self._n_shared_row[slot] = 0
+                        self._pages_dirty = True
+                    else:
+                        self.cache = _scatter_row_donate(self.cache,
+                                                         row_cache, slot)
             except Exception as e:   # quarantined: reject THIS request
                 if self.paged and page_ids:
                     self.pool.free(page_ids)
                 self._fail(sess, f"prefill failed: {e!r}")
                 continue
+            if cached:
+                self.n_prefix_hits += 1
+                skipped = len(cached) * self.page_size
+                self.n_prefix_tokens += skipped
+                sess.n_cached_tokens += skipped
+            if self.paged and self.prefix_cache is not None \
+                    and not sess.extra_inputs:
+                # donate the row's full pages right away: requests later
+                # in this same admission sweep (and every future one)
+                # can share the prefix just prefilled
+                n_full = min(len(ids) // self.page_size, len(page_ids))
+                self.prefix_cache.insert(
+                    ids[:n_full * self.page_size], page_ids[:n_full])
             self._logits = self._logits.at[slot].set(
-                logits[0, -1].astype(jnp.float32))
+                logits_row.astype(jnp.float32))
             sess.model_time += time.perf_counter() - t0
             sess.n_fwd += 1
             self.n_fwd += 1
@@ -754,10 +882,66 @@ class ContinuousBatchingScheduler:
             self._dev_state[slot] = self._sid_for(sess)
             self._dev_age[slot] = 0
             if self.journal is not None:
+                # cache adoption is recorded for observability/auditing;
+                # replay does not need it (restored admissions re-acquire
+                # through the cache or fall back to a full re-prefill,
+                # identical either way by prefix determinism)
                 self.journal.append({"kind": "admit", "rid": sess.rid,
-                                     "slot": slot})
+                                     "slot": slot,
+                                     "cached_pages": len(cached),
+                                     "cached_checker":
+                                         sess.cached_checker})
             if self._inject("prefill_nan", sess):
                 self._logits = self._logits.at[slot].set(jnp.nan)
+
+    def _cached_prefill(self, sess: Session, slot: int, ids: List[int],
+                        page_ids: List[int], n_cached: int):
+        """Admission through a prefix-cache hit: the first ``n_cached``
+        pages of the row's block table map shared pages whose K/V is
+        already resident (bitwise-identical by prefix determinism), so
+        only the tail ``ids[n_cached * page_size:]`` is prefilled — as a
+        multi-token DECODE over a B=1 view of the pool leaves, which
+        reads the shared prefix through the block table and writes only
+        private pages (every write position sits at or beyond the
+        boundary page).  Returns the last real token's logits row.
+
+        NOT a tick function: runs only from ``_admit`` (lint rule R6
+        keeps cache traffic off the per-token path).
+        """
+        eng = self.eng
+        ps = self.page_size
+        start = n_cached * ps
+        tail = list(ids[start:])
+        assert tail, "cache hit must leave a non-empty private tail"
+        # bucket the tail so the B=1 decode compiles per size class, not
+        # per length; pads write garbage above the final frontier (pos >=
+        # len is invalid by contract) into private/trash pages only
+        p = min(_bucket_len(len(tail), eng.max_len), eng.max_len - start)
+        feed = jnp.asarray(
+            [tail + [eng.tok.pad_id] * (p - len(tail))], jnp.int32)
+        padded = np.zeros(self.max_pages, np.int32)
+        padded[:len(page_ids)] = page_ids
+        view = {
+            "len": jnp.asarray([start], jnp.int32),
+            "head": self.cache["head"],
+            "tail": self.cache["tail"],
+            "group": self.cache["group"],
+            "pages": jnp.asarray(padded)[None, :],
+        }
+        lg, view = eng._decode(eng.params, view, feed)
+        # merge the written pool leaves back; other rows' pages are
+        # untouched (the scatter only wrote this row's private pages)
+        cache = dict(self.cache)
+        cache["head"], cache["tail"] = view["head"], view["tail"]
+        cache["group"] = view["group"]
+        cache["len"] = cache["len"].at[slot].set(len(ids))
+        self.cache = cache
+        self._page_tbl[slot, :] = 0
+        self._page_tbl[slot, :len(page_ids)] = page_ids
+        self._n_pages_row[slot] = len(page_ids)
+        self._n_shared_row[slot] = n_cached
+        self._pages_dirty = True
+        return lg[0, len(tail) - 1]
 
     def _reset_vacant_lens(self) -> None:
         """Vacant slots' rows are garbage by contract, but every batched
@@ -795,6 +979,7 @@ class ContinuousBatchingScheduler:
             self._premask.pop(sess.slot, None)
             self._dev_state[sess.slot] = OFF_FRONTIER
             if self.paged:
+                self._insert_prefix(sess)
                 self._free_slot_pages(sess.slot)
             self.slots[sess.slot] = None
             sess.slot = -1
@@ -917,9 +1102,18 @@ class ContinuousBatchingScheduler:
         oldest resident lands at the queue front for re-admission."""
         self.n_engine_resets += 1
         self._fail_log.append((None, f"engine reset: {reason}"))
-        for sess in sorted((s for s in self.slots if s is not None),
-                           key=lambda s: s.t_admit, reverse=True):
-            self._preempt(sess)
+        if self.prefix_cache is not None:
+            # cached pages' contents die with the device cache: drop the
+            # node references FIRST so the preempts below release the
+            # last table references and the pages actually return
+            self.prefix_cache.reset()
+        self._in_reset = True
+        try:
+            for sess in sorted((s for s in self.slots if s is not None),
+                               key=lambda s: s.t_admit, reverse=True):
+                self._preempt(sess)
+        finally:
+            self._in_reset = False
         eng = self.eng
         if self.paged:
             self.cache = eng.model.init_cache(
@@ -979,7 +1173,27 @@ class ContinuousBatchingScheduler:
                                  else st),
                          error=entry.terminal["error"])
             return sess
-        for tok in entry.toks:
+        toks = [int(t) for t in entry.toks]
+        n_adopted = 0
+        sig = self._checker_sig(sess)
+        if self.prefix_cache is not None and sig is not None and toks:
+            # fork-point fast path: clone the longest stored checker
+            # snapshot covering a prefix of the journaled tokens and
+            # replay only the remainder through advance().  Exact-prefix
+            # keying (grammar sig + prompt length + token ids) makes the
+            # clone's state identical to what the replay would build.
+            got = self.prefix_cache.get_checker(
+                sig, len(sess.prompt_ids),
+                list(sess.prompt_ids) + toks)
+            if got is not None:
+                n_cov, clone = got
+                n_adopted = n_cov - len(sess.prompt_ids)
+                sess.checker = clone
+                sess.out_ids.extend(toks[:n_adopted])
+                sess.budget -= n_adopted
+                sess.cached_checker = True
+                self.n_checker_clones += 1
+        for tok in toks[n_adopted:]:
             try:
                 ok = (sess.checker.advance(int(tok))
                       if sess.checker is not None else True)
@@ -996,6 +1210,13 @@ class ContinuousBatchingScheduler:
             sess.budget -= 1
         sess.n_replayed = len(entry.toks)
         self.n_replayed_tokens += len(entry.toks)
+        if self.prefix_cache is not None and sig is not None \
+                and sess.out_ids:
+            # snapshot the fully-replayed state so later adopts in this
+            # same restore (and their preemption re-admissions) clone it
+            self.prefix_cache.put_checker(
+                sig, len(sess.prompt_ids),
+                list(sess.prompt_ids) + list(sess.out_ids), sess.checker)
         sess.n_draws = entry.n_draws
         if entry.rng_state is not None and sess.decode is not None:
             rng = sess.decode.make_rng()
@@ -1017,7 +1238,60 @@ class ContinuousBatchingScheduler:
             self.pool.free(self._page_tbl[slot, :n].tolist())
         self._page_tbl[slot, :] = 0         # vacant entries -> trash page
         self._n_pages_row[slot] = 0
+        if self.prefix_cache is not None:
+            self._n_shared_row[slot] = 0
         self._pages_dirty = True
+
+    def _alloc_pages(self, n: int) -> Optional[List[int]]:
+        """``pool.alloc`` with prefix-cache LRU eviction as the
+        fallback: cache-only pages (refcount 1, unpinned) are reclaimed
+        to cover the shortfall before admission backpressures or a
+        resident row is preempted.  A page a live block table maps is
+        never a candidate (its refcount is >= 2)."""
+        got = self.pool.alloc(n)
+        if got is None and self.prefix_cache is not None:
+            self.prefix_cache.evict(n - self.pool.available)
+            got = self.pool.alloc(n)
+        return got
+
+    def _checker_sig(self, sess: Session) -> Optional[tuple]:
+        """Hashable signature of everything that shapes a session's
+        checker state besides the advanced tokens, or None when the
+        checker is not shareable (non-DOMINO modes, healed subclasses,
+        ad-hoc grammar objects with no stable name)."""
+        if sess.checker is None or type(sess.checker) is not DominoDecoder:
+            return None
+        req = sess.request
+        spec = None if req is None else req.constraint
+        if spec is None or not isinstance(spec.grammar, str):
+            return None
+        return (spec.grammar, spec.mode, spec.k, sess.eos_id)
+
+    def _insert_prefix(self, sess: Session) -> None:
+        """Donate a departing row's committed full pages to the radix
+        tree and snapshot its checker at the fork point, so a future
+        request sharing the prefix skips both the prefill and (on
+        restart recovery) the ``advance()`` replay.  Teardown-boundary
+        only (``_finish``/``_preempt``) — never from a tick function
+        (lint R6), and never during an engine reset (the pool leaves'
+        contents are untrustworthy)."""
+        if self.prefix_cache is None or sess.slot < 0 or self._in_reset \
+                or sess.extra_inputs:
+            return
+        if sess.status == "internal_error":
+            return      # quarantined row: its device state is suspect
+        slot = sess.slot
+        ids = list(sess.prompt_ids) + list(sess.out_ids)
+        n_full = min(len(ids) // self.page_size,
+                     int(self._n_pages_row[slot]))
+        if n_full > 0:
+            self.prefix_cache.insert(
+                ids[:n_full * self.page_size],
+                self._page_tbl[slot, :n_full].tolist())
+        sig = self._checker_sig(sess)
+        if sig is not None and sess.out_ids:
+            self.prefix_cache.put_checker(sig, len(sess.prompt_ids),
+                                          ids, sess.checker)
 
     def _preempt(self, sess: Session) -> None:
         """Recompute preemption (pool exhausted mid-flight): reclaim the
@@ -1029,6 +1303,10 @@ class ContinuousBatchingScheduler:
         slot = sess.slot
         self._premask.pop(slot, None)
         self._dev_state[slot] = OFF_FRONTIER
+        # donate the committed prefix before releasing the table refs:
+        # re-admission re-acquires these very pages through the cache,
+        # so a recompute preemption re-prefills only the partial tail
+        self._insert_prefix(sess)
         self._free_slot_pages(slot)
         self.slots[slot] = None
         sess.slot = -1
@@ -1066,8 +1344,12 @@ class ContinuousBatchingScheduler:
                     1, sum(s is not None for s in self.slots) - 1)
                 self.n_capacity_shrinks += 1
                 self._shrunk_tick = True
-            elif shortfall <= self.pool.available and not (
+            elif shortfall <= self.pool.available + (
+                    0 if self.prefix_cache is None
+                    else self.prefix_cache.evictable()) and not (
                     shortfall and self._inject("page_exhaustion")):
+                # cache-only pages count as available: _alloc_pages
+                # below reclaims them LRU-first before any preemption
                 break
             victims = [s for s in self.slots if s is not None]
             if not victims:
@@ -1075,7 +1357,7 @@ class ContinuousBatchingScheduler:
             self._preempt(max(victims, key=lambda s: s.t_admit))
         for slot, want in need.items():
             have = int(self._n_pages_row[slot])
-            got = self.pool.alloc(want - have)
+            got = self._alloc_pages(want - have)
             self._page_tbl[slot, have:want] = got
             self._n_pages_row[slot] = want
             self._pages_dirty = True

@@ -52,6 +52,10 @@ class GenerationResult:
     # tokens restored from the crash journal on restart (replayed through
     # the concrete checker, not re-decoded) rather than generated live
     n_replayed_tokens: int = 0
+    # prefill positions served from the radix prefix cache (shared KV
+    # pages block-mapped instead of recomputed) across every admission
+    # of this request — the per-row "prefill FLOPs skipped" signal
+    n_cached_prefix_tokens: int = 0
     # the checker reached a state with NO legal token (including EOS).
     # Output up to this point is a valid *prefix* but cannot be completed;
     # forcing EOS here would silently emit grammar-violating output.
@@ -139,6 +143,11 @@ class Session:
     n_device_tokens: int = 0
     # tokens restored from the crash journal (see GenerationResult)
     n_replayed: int = 0
+    # prefill positions skipped via prefix-cache page hits (cumulative
+    # over re-admissions), and whether adopt() cloned a cached checker
+    # snapshot instead of replaying the journal through advance()
+    n_cached_tokens: int = 0
+    cached_checker: bool = False
     mask_time: float = 0.0            # this request's checker time only
     mask_overlap: float = 0.0         # ... of which hidden under device
     model_time: float = 0.0
@@ -200,6 +209,7 @@ class Session:
             n_preemptions=self.n_preempt,
             n_device_tokens=self.n_device_tokens,
             n_replayed_tokens=self.n_replayed,
+            n_cached_prefix_tokens=self.n_cached_tokens,
             model_time_s=self.model_time,
             wall_time_s=self.t_finish - self.t_submit,
             finished=self.finished_eos,

@@ -1,0 +1,442 @@
+"""Radix prefix cache: COW paged KV + shared checker state (ISSUE 10).
+
+Acceptance: shared-prefix serving is observationally pure — with the
+cache enabled, mixed-grammar batches over prompts forking a shared
+prefix at random token offsets (greedy AND sampled, with speculative
+rollback crossing the fork page) are token-for-token identical to a
+cold-cache scheduler, including the crash/restore and device-loop
+paths; the pool drains leak-free after all evictions; every tick passes
+the COW partition audit (refcounts = table refs + node refs, no shared
+page writable, free ∩ referenced = ∅); restored sessions adopt
+fork-point checker snapshots instead of replaying ``advance()``.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import grammars
+from repro.core.domino import DominoDecoder
+from repro.core.sampling import GrammarSampler
+from repro.models import build_model
+from repro.serving import (ConstraintSpec, ContinuousBatchingScheduler,
+                           DecodeParams, PrefixCache, Request,
+                           ServingEngine, TokenJournal, check_invariants,
+                           replay_journal)
+from repro.serving.scheduler import PagePool
+from repro.tokenizer import train_bpe
+
+BASE = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+            dtype="float32", max_seq_len=512)
+
+
+@pytest.fixture(scope="module")
+def setup(request):
+    tok = request.getfixturevalue("small_tokenizer")
+    cfg = ModelConfig(arch_id="pfx", family="dense",
+                      vocab_size=tok.vocab_size, **BASE)
+    m = build_model(cfg)
+    return m, m.init(jax.random.PRNGKey(0)), tok
+
+
+@pytest.fixture(scope="module")
+def engine(setup, json_grammar):
+    m, params, tok = setup
+    eng = ServingEngine(m, params, tok, max_len=256)
+    eng.register_grammar("json", json_grammar)
+    eng.register_grammar("c", grammars.load("c"))
+    eng.precompute()
+    return eng
+
+
+# -- PagePool refcounts --------------------------------------------------------
+
+
+def test_pool_refcounts_alloc_retain_release():
+    pool = PagePool(8)
+    got = pool.alloc(3)
+    assert got is not None and all(pool.refcount(p) == 1 for p in got)
+    pool.retain(got[:2])
+    assert pool.refcount(got[0]) == 2 and pool.refcount(got[2]) == 1
+    avail = pool.available
+    pool.release(got)              # drops table refs
+    assert pool.available == avail + 1      # only got[2] hit zero
+    pool.release(got[:2])          # drops the retained refs
+    assert pool.available == 7 == pool.n_pages - 1
+    assert all(pool.refcount(p) == 0 for p in got)
+
+
+def test_pool_free_is_release_alias_and_asserts():
+    pool = PagePool(4)
+    got = pool.alloc(2)
+    pool.free(got)                 # historical name, same semantics
+    assert pool.available == 3
+    with pytest.raises(AssertionError):
+        pool.release([got[0]])     # double release
+
+
+# -- radix tree unit -----------------------------------------------------------
+
+
+def _ids(n, base=0):
+    return list(range(base, base + n))
+
+
+def test_radix_insert_lookup_page_granular():
+    pool = PagePool(32)
+    pc = PrefixCache(pool, page_size=4)
+    pages = pool.alloc(3)
+    ids = _ids(12)
+    assert pc.insert(ids, pages) == 3
+    # owner releases; nodes keep the pages alive
+    pool.release(pages)
+    assert pool.available == 32 - 1 - 3 and pc.n_pages == 3
+    # full match capped one token short of the sequence
+    got = pc.lookup(ids, max_pages=(len(ids) - 1) // 4)
+    assert got == pages[:2]        # 2 pages: the cap excludes page 3
+    assert all(pool.refcount(p) == 2 for p in got)
+    pool.release(got)
+    # divergence mid-page matches only whole shared pages
+    fork = ids[:6] + [99] * 6
+    got = pc.lookup(fork, max_pages=2)
+    assert got == pages[:1]
+    pool.release(got)
+    # no match at all
+    assert pc.lookup([7] * 12, max_pages=2) == []
+
+
+def test_radix_graft_keeps_incumbent_page():
+    pool = PagePool(32)
+    pc = PrefixCache(pool, page_size=4)
+    a = pool.alloc(2)
+    pc.insert(_ids(8), a)
+    b = pool.alloc(2)              # same tokens, different pages
+    assert pc.insert(_ids(8), b) == 0      # both depths already present
+    pool.release(b)                # b unadopted -> freed
+    assert pc.n_pages == 2 and pc.owns(a[0]) and not pc.owns(b[0])
+    got = pc.lookup(_ids(8), max_pages=1)
+    assert got == [a[0]]           # incumbent survives
+    pool.release(got)
+    pool.release(a)
+
+
+def test_radix_eviction_lru_leaf_only_respects_refs_and_pins():
+    pool = PagePool(32)
+    pc = PrefixCache(pool, page_size=2)
+    chain = pool.alloc(3)          # one 3-deep chain
+    pc.insert([1, 2, 3, 4, 5, 6], chain)
+    pool.release(chain)
+    other = pool.alloc(1)          # a sibling leaf, older access time
+    pc.insert([9, 9], other)
+    pool.release(other)
+    got = pc.lookup([1, 2, 3, 4, 5, 6], max_pages=3)  # refresh chain LRU
+    pool.release(got)              # drop the lookup refs again
+    # interior nodes are not evictable while children exist: evict(1)
+    # must take the LRU *leaf* — the sibling, not the chain interior
+    assert pc.evict(1) == 1
+    assert not pc.owns(other[0]) and pc.owns(chain[0])
+    # a table-referenced leaf is never evicted
+    got = pc.lookup([1, 2, 3, 4, 5, 6], max_pages=3)
+    assert got == chain
+    assert pc.evict(10) == 0       # every node refcount >= 2
+    pool.release(got)
+    # pinned nodes survive eviction pressure
+    pinned = pool.alloc(1)
+    pc.insert([7, 7], pinned, pin=True)
+    pool.release(pinned)
+    n = pc.evict(10)
+    assert pc.owns(pinned[0]) and n == 3     # chain fully cascaded
+    assert pool.available == 32 - 1 - 1      # only the pin remains
+    pc.reset()
+    assert pool.available == 32 - 1 and pc.n_pages == 0
+
+
+def test_evictable_counts_transitively():
+    pool = PagePool(32)
+    pc = PrefixCache(pool, page_size=2)
+    chain = pool.alloc(3)
+    pc.insert([1, 2, 3, 4, 5, 6], chain)
+    pool.release(chain)
+    assert pc.evictable() == 3     # leaf exposes parent exposes root
+    got = pc.lookup([1, 2], max_pages=1)     # table ref on the TOP node
+    assert pc.evictable() == 2     # children still reclaimable
+    pool.release(got)
+    assert pc.evictable() == 3
+
+
+# -- checker snapshot store ----------------------------------------------------
+
+
+def test_checker_snapshots_keyed_by_prompt_split(json_grammar,
+                                                 small_tokenizer):
+    tok = small_tokenizer
+    pc = PrefixCache(PagePool(4), page_size=4)
+    d = DominoDecoder(json_grammar, list(tok.vocab), tok.eos_id)
+    toks = []
+    for _ in range(3):
+        legal = np.flatnonzero(d.mask())
+        t = int(next(x for x in legal if x != tok.eos_id))
+        assert d.advance(t)
+        toks.append(t)
+    sig = ("json", "domino", None, tok.eos_id)
+    prompt = [5, 6, 7]
+    pc.put_checker(sig, len(prompt), prompt + toks, d)
+    # exact hit at full length; clone is pristine and independent
+    n, clone = pc.get_checker(sig, len(prompt), prompt + toks)
+    assert n == len(prompt) + len(toks)
+    assert clone.n_mask_memo_hits == 0       # counters reset on snapshot
+    assert np.array_equal(clone.mask_bits(), d.mask_bits())
+    # longest-prefix: extra generated tokens fall back to the stored cut
+    n2, _ = pc.get_checker(sig, len(prompt), prompt + toks + [1, 2])
+    assert n2 == len(prompt) + len(toks)
+    # SAME token sequence but a different prompt/generated split is a
+    # DIFFERENT state (prompts never advance the checker) -> miss
+    assert pc.get_checker(sig, len(prompt) - 1, prompt + toks) is None
+    assert pc.get_checker(("c",) + sig[1:], len(prompt),
+                          prompt + toks) is None
+
+
+# -- serving: observational purity --------------------------------------------
+
+
+def _fork_requests(seed=11):
+    """Mixed-grammar requests forking a shared preamble at random token
+    offsets: greedy + sampled + speculative rows."""
+    rng = np.random.default_rng(seed)
+    pre = "shared system preamble with many common tokens in front: "
+    reqs = []
+    for i in range(10):
+        cut = int(rng.integers(10, len(pre)))
+        prompt = pre[:cut] if i % 3 else pre
+        prompt += f"req {i}: "
+        if i % 4 == 3:
+            spec = ConstraintSpec()                      # unconstrained
+        elif i % 2:
+            spec = ConstraintSpec(grammar="c", mode="domino")
+        else:
+            spec = ConstraintSpec(grammar="json", mode="domino")
+        dec = DecodeParams(max_tokens=8,
+                           temperature=(0.8 if i % 5 == 4 else 0.0),
+                           seed=100 + i,
+                           speculative=(i % 6 == 2), spec_s=4,
+                           spec_threshold=0.0)
+        reqs.append(Request(prompt, spec, dec))
+    return reqs
+
+
+def _drive(eng, reqs, prefix_cache, n_pages=220, capacity=3,
+           **kw):
+    sched = ContinuousBatchingScheduler(
+        eng, capacity=capacity, paged=True, page_size=8,
+        n_pages=n_pages, prefix_cache=prefix_cache,
+        debug_invariants=True, **kw)
+    sessions = [sched.submit(r) for r in reqs]
+    sched.run()
+    return sched, [s.result for s in sessions]
+
+
+def test_warm_cache_bitwise_identical_to_cold(engine):
+    reqs = _fork_requests()
+    _, cold = _drive(engine, reqs, prefix_cache=False)
+    sched, warm = _drive(engine, reqs, prefix_cache=True)
+    for c, w in zip(cold, warm):
+        assert w.token_ids == c.token_ids
+        assert w.status == c.status
+        assert w.finished == c.finished and w.dead_end == c.dead_end
+    assert sched.n_prefix_hits > 0 and sched.n_prefix_tokens > 0
+    assert any(w.n_cached_prefix_tokens > 0 for w in warm)
+    assert all(c.n_cached_prefix_tokens == 0 for c in cold)
+    # leak-free drain: all pages back once the cache lets go
+    assert check_invariants(sched) == []
+    held = sched.prefix_cache.n_pages
+    assert sched.pool.available == sched.n_pages - 1 - held
+    sched.prefix_cache.reset()
+    assert sched.pool.available == sched.n_pages - 1
+
+
+def test_speculative_rollback_crossing_fork_page(engine):
+    """Speculative rows whose rollback rewinds INTO the first private
+    page after the fork: the shared boundary is never crossed (the
+    frontier floor is one past the shared prefix) and outputs stay
+    identical."""
+    pre = "shared system preamble with many common tokens in front: "
+    reqs = [Request(pre + f"s{i} ",
+                    ConstraintSpec(grammar="json", mode="domino"),
+                    DecodeParams(max_tokens=10, speculative=True,
+                                 spec_s=6, spec_threshold=0.0, seed=i))
+            for i in range(4)]
+    _, cold = _drive(engine, reqs, prefix_cache=False, capacity=4)
+    sched, warm = _drive(engine, reqs, prefix_cache=True, capacity=4)
+    for c, w in zip(cold, warm):
+        assert w.token_ids == c.token_ids and w.status == c.status
+    assert sched.n_prefix_hits > 0
+    assert any(r.n_spec_proposed > 0 for r in warm)
+    sched.prefix_cache.reset()
+    assert sched.pool.available == sched.n_pages - 1
+
+
+def test_tiny_pool_eviction_and_preemption_pressure(engine):
+    """An undersized pool forces cache evictions AND recompute
+    preemptions; preempted rows re-acquire their own donated pages
+    through the cache on re-admission; outputs stay identical and the
+    pool drains leak-free."""
+    reqs = _fork_requests(seed=23)
+    _, cold = _drive(engine, reqs, prefix_cache=False, n_pages=16,
+                     capacity=3)
+    sched, warm = _drive(engine, reqs, prefix_cache=True, n_pages=16,
+                         capacity=3)
+    for c, w in zip(cold, warm):
+        assert w.token_ids == c.token_ids and w.status == c.status
+    assert sched.prefix_cache.n_evicted > 0
+    sched.prefix_cache.reset()
+    assert sched.pool.available == sched.n_pages - 1
+
+
+def test_pinned_prompt_first_request_hits(engine):
+    pre = "shared system preamble with many common tokens in front: "
+    engine.pin_prompt(pre)
+    try:
+        sched = ContinuousBatchingScheduler(
+            engine, capacity=2, paged=True, page_size=8, n_pages=220,
+            prefix_cache=True, debug_invariants=True)
+        sched._pin_prompts()
+        assert sched.prefix_cache.n_pages > 0
+        pinned_pages = sched.prefix_cache.n_pages
+        sess = sched.submit(Request(
+            pre + "x", ConstraintSpec(grammar="json", mode="domino"),
+            DecodeParams(max_tokens=4)))
+        sched.run()
+        assert sess.result.status == "ok"
+        assert sess.result.n_cached_prefix_tokens > 0   # very first request
+        assert sched.n_prefix_hits >= 1
+        # pinned nodes survive maximal eviction pressure
+        sched.prefix_cache.evict(10 ** 6)
+        assert sched.prefix_cache.n_pages >= pinned_pages
+    finally:
+        engine.pinned_prompts.clear()
+
+
+def test_cache_requires_paged(engine):
+    with pytest.raises(ValueError, match="prefix_cache"):
+        ContinuousBatchingScheduler(engine, capacity=1, paged=False,
+                                    prefix_cache=True)
+
+
+# -- device-resident fused loop interop ----------------------------------------
+
+
+@pytest.fixture(scope="module")
+def byte_engine(json_grammar):
+    """Byte-level tokenizer so the JSON grammar certifies clean and the
+    engine builds a device table (the test_device_loop idiom)."""
+    corpus = GrammarSampler(json_grammar, seed=7).corpus(80)
+    tok = train_bpe(corpus, vocab_size=257)
+    cfg = ModelConfig(arch_id="pfx-dev", family="dense",
+                      vocab_size=tok.vocab_size, **BASE)
+    m = build_model(cfg)
+    eng = ServingEngine(m, m.init(jax.random.PRNGKey(0)), tok,
+                        max_len=256, device_tables=True)
+    eng.register_grammar("json", json_grammar)
+    eng.precompute()
+    assert "json" in eng.device_tables
+    return eng
+
+
+def test_device_loop_warm_vs_cold(byte_engine):
+    """Certified greedy rows riding the fused device loop admit through
+    the cache (shared pages block-mapped, tail re-prefilled) and stay
+    bitwise-identical to a cold cache, with tokens still committed on
+    device."""
+    pre = "shared device preamble common to every request: "
+    reqs = [Request(pre + f"d{i} ",
+                    ConstraintSpec(grammar="json", mode="domino"),
+                    DecodeParams(max_tokens=12))
+            for i in range(4)]
+
+    def drive(pc):
+        sched = ContinuousBatchingScheduler(
+            byte_engine, capacity=2, paged=True, page_size=8,
+            n_pages=128, prefix_cache=pc, device_loop=True, sync_n=4,
+            debug_invariants=True)
+        sessions = [sched.submit(r) for r in reqs]
+        sched.run()
+        return sched, [s.result for s in sessions]
+
+    _, cold = drive(False)
+    sched, warm = drive(True)
+    for c, w in zip(cold, warm):
+        assert w.token_ids == c.token_ids and w.status == c.status
+    assert sched.n_prefix_hits > 0
+    assert any(w.n_device_tokens > 0 for w in warm)
+    sched.prefix_cache.reset()
+    assert sched.pool.available == sched.n_pages - 1
+
+
+# -- crash/restore interop -----------------------------------------------------
+
+
+def test_restore_adopts_checker_snapshots_bitwise_identical(
+        engine, tmp_path):
+    """Crash mid-run, restore with the cache enabled: live entries whose
+    journaled prefix shares (grammar, prompt, tokens) adopt a cloned
+    fork-point snapshot (n_checker_clones > 0), admissions re-acquire
+    pages through the cache, and the journal's admit records say so —
+    with every restored row bitwise-identical to an uninterrupted run."""
+    pre = "shared system preamble with many common tokens in front: "
+    reqs = [Request(pre, ConstraintSpec(grammar="json", mode="domino"),
+                    DecodeParams(max_tokens=12))
+            for _ in range(3)]     # identical prompts -> identical prefixes
+    _, ref = _drive(engine, reqs, prefix_cache=True)
+
+    path = os.fspath(tmp_path / "crash.journal")
+    journal = TokenJournal(path)
+    sched = ContinuousBatchingScheduler(
+        engine, capacity=2, paged=True, page_size=8, n_pages=220,
+        prefix_cache=True, journal=journal, debug_invariants=True)
+    sessions = [sched.submit(r) for r in reqs]
+    for _ in range(5):             # part-way: live entries in the journal
+        sched.step()
+    assert any(s.result is None for s in sessions)
+    del sched                      # simulated crash: no drain, no close
+
+    restored = engine.restore(path, max_batch=2, paged=True, page_size=8,
+                              n_pages=220, prefix_cache=True,
+                              debug_invariants=True)
+    assert restored.n_checker_clones > 0
+    assert any(s.cached_checker for s in
+               list(restored.waiting) + restored.finished)
+    restored.run()
+    by_rid = {s.rid: s.result for s in restored.finished}
+    for rid, want in enumerate(ref):
+        assert by_rid[rid].token_ids == want.token_ids
+        assert by_rid[rid].status == want.status
+    # admit records carry cache adoption for observability
+    entries = replay_journal(path)
+    assert any(e.n_cached_pages > 0 for e in entries.values())
+
+
+def test_restore_cold_cache_falls_back_to_full_prefill(engine, tmp_path):
+    """The same crash journal restores bitwise-identically WITHOUT the
+    cache (full re-prefill fallback)."""
+    reqs = [Request("A json value follows: ",
+                    ConstraintSpec(grammar="json", mode="domino"),
+                    DecodeParams(max_tokens=10)) for _ in range(2)]
+    _, ref = _drive(engine, reqs, prefix_cache=True)
+    path = os.fspath(tmp_path / "cold.journal")
+    sched = ContinuousBatchingScheduler(
+        engine, capacity=1, paged=True, page_size=8, n_pages=220,
+        prefix_cache=True, journal=TokenJournal(path),
+        debug_invariants=True)
+    for r in reqs:
+        sched.submit(r)
+    for _ in range(4):
+        sched.step()
+    del sched
+    restored = engine.restore(path, max_batch=1, paged=True, page_size=8,
+                              n_pages=220, debug_invariants=True)
+    restored.run()
+    by_rid = {s.rid: s.result for s in restored.finished}
+    for rid, want in enumerate(ref):
+        assert by_rid[rid].token_ids == want.token_ids

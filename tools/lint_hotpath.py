@@ -33,7 +33,16 @@ Rules (AST-based, stdlib only):
       during tick phases and does ALL its file I/O in ``_journal_tick``
       at the tick boundary — an fsync on the per-token path serializes
       decode on disk latency, which is exactly the overhead the batched
-      write-ahead design exists to avoid.
+      write-ahead design exists to avoid;
+  R6  no radix-tree mutation or checker-state serialization inside
+      tick-path functions: prefix-cache traffic
+      (``self.prefix_cache.insert/lookup/put_checker/get_checker`` and
+      checker ``snapshot()`` calls) belongs at admission/teardown
+      boundaries (``_admit``/``_finish``/``_preempt``/``adopt``) — a
+      tree walk or a hypothesis-set fork per token would put O(prefix)
+      host work back on the per-token path the cache exists to shorten.
+      Only ``evict()``/``evictable()`` may run from tick functions
+      (``_ensure_pages`` reclaims cache-only pages under pool pressure).
 
 A finding is suppressed by putting ``# hotpath-lint: allow`` on the
 offending physical line (or the line above it).  Every suppression is a
@@ -73,6 +82,9 @@ TICK_FUNCS: Set[str] = {
 }
 
 ALLOC_FUNCS = {"zeros", "ones", "empty", "full", "tile"}
+# R6: the only prefix-cache operations a tick function may invoke
+# (allocation-pressure reclaim); everything else is boundary-only
+PREFIX_CACHE_TICK_OK = {"evict", "evictable"}
 # R5: journal/file-sync entry points banned from tick-path functions
 SYNC_BANNED = {"fsync", "flush", "commit_tick", "sync"}
 CLOCK_BANNED = {("time", "time"), ("datetime", "now"),
@@ -151,6 +163,15 @@ def _check_hot_scope(tree_nodes, path: str, lines: List[str],
                 f"must batch at the tick boundary (_journal_tick); an "
                 f"fsync/flush on the per-token path serializes decode "
                 f"on disk latency"))
+        if (base == "self.prefix_cache"
+                and name not in PREFIX_CACHE_TICK_OK) or name == "snapshot":
+            out.append(Finding(
+                path, node.lineno, "R6",
+                f"prefix-cache/checker-state call {name}(...) in {where} "
+                f"— radix-tree mutation and checker serialization belong "
+                f"at admission/teardown boundaries (_admit/_finish/"
+                f"_preempt/adopt), never on the per-token tick path; "
+                f"only evict()/evictable() may run under pool pressure"))
     return out
 
 

@@ -1,8 +1,8 @@
 #!/usr/bin/env python
 """Kill -9 mid-run restart smoke: crash-consistency end to end.
 
-Three subprocess runs of the serve driver (same deterministic engine:
-seeded tokenizer corpus + PRNGKey(0) init):
+Each drill is three subprocess runs of the serve driver (same
+deterministic engine: seeded tokenizer corpus + PRNGKey(0) init):
 
   1. reference — fault-free run, ``--print-ids`` captures the greedy
      token ids per request;
@@ -14,7 +14,14 @@ seeded tokenizer corpus + PRNGKey(0) init):
      every live request from its validated committed prefix, and must
      print IDS lines bitwise-identical to the reference run.
 
-The smoke fails if the crash run does NOT die by SIGKILL (workload too
+The drill runs TWICE: once with the baseline workload, and once with
+``--prefix-cache`` over a workload whose prompts repeat (a small page
+size makes whole-page prefix hits certain), so restore exercises the
+cache-warm path — restored admissions re-acquire shared pages through
+the radix cache and adopt fork-point checker snapshots, and must STILL
+be bitwise-identical to the (equally cache-enabled) reference.
+
+The smoke fails if a crash run does NOT die by SIGKILL (workload too
 small for K syncs), if restore errors, or if any row's ids differ.
 
 Usage: python tools/restart_smoke.py [--device-loop] [--keep]
@@ -31,6 +38,12 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 WORKLOAD = ["--grammar", "json", "--mode", "domino", "--prompts", "3",
             "--max-tokens", "16", "--slots", "2", "--seed", "0"]
+
+# cache-warm drill: 5 prompts over the 4-entry base-prompt cycle, so at
+# least one prompt repeats verbatim; page size 8 keeps whole pages well
+# inside the short prompts (argparse takes the LAST occurrence, so these
+# override the baseline workload's values)
+WARM_EXTRA = ["--prompts", "5", "--page-size", "8", "--prefix-cache"]
 
 
 def _env():
@@ -63,43 +76,34 @@ def _ids(out: str):
     return rows
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--device-loop", action="store_true",
-                    help="route certified rows through the fused "
-                         "device loop in all three runs")
-    ap.add_argument("--crash-after-syncs", type=int, default=4)
-    ap.add_argument("--keep", action="store_true",
-                    help="keep the journal file for inspection")
-    args = ap.parse_args()
-    dev = ["--device-loop"] if args.device_loop else []
-
-    ref = _run(dev + ["--print-ids"])
+def _drill(extra, crash_after_syncs, keep, label):
+    """One reference -> crash -> restore cycle; returns restored rows."""
+    ref = _run(extra + ["--print-ids"])
     want = _ids(ref.stdout)
     if not want or not any(want.values()):
-        raise SystemExit("[restart-smoke] FAIL: reference run produced "
-                         "no token ids")
+        raise SystemExit(f"[restart-smoke] FAIL({label}): reference run "
+                         f"produced no token ids")
 
     fd, journal = tempfile.mkstemp(prefix="restart_smoke_",
                                    suffix=".journal")
     os.close(fd)
     os.unlink(journal)                  # serve creates it fresh
     try:
-        crash = _run(dev + ["--journal", journal, "--crash-after-syncs",
-                            str(args.crash_after_syncs)],
+        crash = _run(extra + ["--journal", journal, "--crash-after-syncs",
+                              str(crash_after_syncs)],
                      check_rc=None)
         if crash.returncode != -signal.SIGKILL:
             raise SystemExit(
-                f"[restart-smoke] FAIL: crash run exited rc="
+                f"[restart-smoke] FAIL({label}): crash run exited rc="
                 f"{crash.returncode}, expected SIGKILL "
                 f"(-{int(signal.SIGKILL)}) — workload finished before "
-                f"{args.crash_after_syncs} journal syncs?")
+                f"{crash_after_syncs} journal syncs?")
         if not os.path.exists(journal) or not os.path.getsize(journal):
-            raise SystemExit("[restart-smoke] FAIL: crashed run left no "
-                             "journal bytes")
+            raise SystemExit(f"[restart-smoke] FAIL({label}): crashed "
+                             f"run left no journal bytes")
 
-        rest = _run(dev + ["--restore", "--journal", journal,
-                           "--print-ids"])
+        rest = _run(extra + ["--restore", "--journal", journal,
+                             "--print-ids"])
         got = _ids(rest.stdout)
         if got != want:
             for rid in sorted(set(want) | set(got)):
@@ -107,17 +111,36 @@ def main() -> int:
                 mark = "ok" if a == b else "MISMATCH"
                 print(f"[restart-smoke] rid {rid}: {mark}\n"
                       f"  reference: {a}\n  restored:  {b}")
-            raise SystemExit("[restart-smoke] FAIL: restored output is "
-                             "not bitwise-identical to the reference")
+            raise SystemExit(f"[restart-smoke] FAIL({label}): restored "
+                             f"output is not bitwise-identical to the "
+                             f"reference")
     finally:
-        if args.keep:
+        if keep:
             print(f"[restart-smoke] journal kept at {journal}")
         elif os.path.exists(journal):
             os.unlink(journal)
+    print(f"[restart-smoke] {label}: SIGKILL after {crash_after_syncs} "
+          f"syncs, {len(want)} request(s) restored bitwise-identical")
+    return want
 
-    print(f"[restart-smoke] OK: SIGKILL after "
-          f"{args.crash_after_syncs} syncs, {len(want)} request(s) "
-          f"restored bitwise-identical")
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--device-loop", action="store_true",
+                    help="route certified rows through the fused "
+                         "device loop in all runs")
+    ap.add_argument("--crash-after-syncs", type=int, default=4)
+    ap.add_argument("--keep", action="store_true",
+                    help="keep the journal files for inspection")
+    args = ap.parse_args()
+    dev = ["--device-loop"] if args.device_loop else []
+
+    base = _drill(dev, args.crash_after_syncs, args.keep, "base")
+    warm = _drill(dev + WARM_EXTRA, args.crash_after_syncs, args.keep,
+                  "prefix-cache")
+    print(f"[restart-smoke] OK: base ({len(base)} requests) and "
+          f"prefix-cache ({len(warm)} requests) drills both restored "
+          f"bitwise-identical")
     return 0
 
 
